@@ -1,0 +1,112 @@
+"""Paper Fig. 3 — level-synchronous BFS over an out-of-core CSR graph.
+
+Read-only workload; the CSR graph (R-MAT-style power-law, Graph500 edge
+probabilities) lives on disk and only the page buffer caches it.  Neighbor
+expansion makes semi-random reads with community locality.
+
+Paper claim: best at a mid page size (512 KiB, 1.8x over mmap); very large
+pages regress (they drag in unused data and thrash the fixed buffer).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import FileStore, UMapConfig, umap, uunmap
+
+from .common import DATA_DIR, KB, MB, PAGE_SIZES, PAGE_SIZES_QUICK, Row, timeit
+
+
+def _rmat_edges(scale: int, edge_factor: int, rng) -> np.ndarray:
+    """Vectorized R-MAT generator (Graph500 probabilities a=.57 b=.19 c=.19)."""
+    n_edges = edge_factor << scale
+    src = np.zeros(n_edges, np.int64)
+    dst = np.zeros(n_edges, np.int64)
+    a, b, c = 0.57, 0.19, 0.19
+    for bit in range(scale):
+        r = rng.random(n_edges)
+        heads = r < (a + b)                  # upper half for src bit
+        r2 = rng.random(n_edges)
+        src_bit = ~heads
+        dst_bit = np.where(heads, r >= a, r2 >= c / (1 - a - b + 1e-12))
+        src |= src_bit.astype(np.int64) << bit
+        dst |= dst_bit.astype(np.int64) << bit
+    return src, dst
+
+
+def _make_csr(path_row: Path, path_col: Path, scale: int, edge_factor: int):
+    if path_row.exists() and path_col.exists():
+        return
+    rng = np.random.default_rng(7)
+    src, dst = _rmat_edges(scale, edge_factor, rng)
+    n = 1 << scale
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    counts = np.bincount(src, minlength=n)
+    row_ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    path_row.parent.mkdir(parents=True, exist_ok=True)
+    row_ptr.tofile(path_row)
+    dst.astype(np.int64).tofile(path_col)
+
+
+def _bfs(row_store: FileStore, col_store: FileStore, cfg: UMapConfig,
+         n: int, roots) -> int:
+    row_region = umap(row_store, config=cfg.replace(
+        buffer_size=max(cfg.page_size * 4, cfg.buffer_size // 4)))
+    col_region = umap(col_store, config=cfg)
+    visited_total = 0
+    try:
+        rows_view = row_region.view(np.int64)
+        cols_view = col_region.view(np.int64)
+        for root in roots:
+            visited = np.zeros(n, bool)
+            frontier = np.array([root], np.int64)
+            visited[root] = True
+            while len(frontier):
+                nxt = []
+                for u in frontier:
+                    lo, hi = rows_view[int(u)], rows_view[int(u) + 1]
+                    if hi > lo:
+                        nbrs = cols_view[int(lo) : int(hi)]
+                        fresh = nbrs[~visited[nbrs]]
+                        if len(fresh):
+                            visited[np.asarray(fresh)] = True
+                            nxt.append(np.unique(fresh))
+                frontier = np.concatenate(nxt) if nxt else np.empty(0, np.int64)
+            visited_total += int(visited.sum())
+    finally:
+        uunmap(row_region)
+        uunmap(col_region)
+    return visited_total
+
+
+def run(quick: bool = True) -> list:
+    scale = 18 if quick else 20            # 256k / 1M vertices
+    edge_factor = 16
+    n = 1 << scale
+    p_row = DATA_DIR / f"bfs_row_{scale}.bin"
+    p_col = DATA_DIR / f"bfs_col_{scale}.bin"
+    _make_csr(p_row, p_col, scale, edge_factor)
+    buffer = (edge_factor << scale) * 8 // 8     # 1/8 of the column data
+    roots = [1, 77, 12345]
+
+    rows = []
+    sizes = [p for p in (PAGE_SIZES_QUICK if quick else PAGE_SIZES)
+             if p <= buffer // 4]          # keep the buffer multi-slot
+    rs, cs = FileStore(str(p_row)), FileStore(str(p_col))
+    try:
+        cfg = UMapConfig.mmap_baseline(buffer_size=buffer)
+        t = timeit(lambda: _bfs(rs, cs, cfg, n, roots))
+        rows.append(Row("bfs", "mmap", 4096, t))
+        for ps in sizes:
+            cfg = UMapConfig(page_size=ps, buffer_size=buffer, num_fillers=8,
+                             num_evictors=2)
+            t = timeit(lambda: _bfs(rs, cs, cfg, n, roots))
+            rows.append(Row("bfs", "umap", ps, t))
+    finally:
+        rs.close()
+        cs.close()
+    return rows

@@ -1,0 +1,84 @@
+"""Shared benchmark plumbing: timing, page-size sweeps, result records.
+
+Every paper-figure benchmark compares the SAME workload code through two
+pager configurations:
+
+  mmap     UMapConfig.mmap_baseline — kernel semantics (4 KiB pages,
+           synchronous fault resolution, heuristic readahead, 10%-dirty
+           flush).  This is the paper's comparison baseline, implemented
+           (per the assignment) rather than assumed.
+  umap     the UMap configuration under test, sweeping UMAP_PAGESIZE.
+
+Datasets are scaled to container disk (DESIGN.md §11.2): claims are about
+curve *shapes* and ratios, not absolute GB/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import gc
+import json
+import time
+from pathlib import Path
+from typing import Callable, List, Optional
+
+DATA_DIR = Path("/tmp/repro_bench")
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+KB, MB, GB = 1024, 1024**2, 1024**3
+
+# the paper's sweep: 4 KiB .. 8 MiB
+PAGE_SIZES = [4 * KB, 16 * KB, 64 * KB, 256 * KB, 1 * MB, 4 * MB, 8 * MB]
+PAGE_SIZES_QUICK = [4 * KB, 64 * KB, 1 * MB, 8 * MB]
+
+
+@dataclasses.dataclass
+class Row:
+    workload: str
+    config: str                 # "mmap" | "umap"
+    page_size: int
+    seconds: float
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(self.extra)
+        d.pop("extra")
+        return d
+
+
+def timeit(fn: Callable[[], None]) -> float:
+    gc.collect()
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def save_rows(name: str, rows: List[Row]) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = RESULTS_DIR / f"{name}.json"
+    out.write_text(json.dumps([r.as_dict() for r in rows], indent=1))
+    return out
+
+
+def speedup_table(rows: List[Row]) -> dict:
+    """page_size -> umap_time; plus the mmap reference; normalized like the
+    paper's figures (UMap time relative to mmap)."""
+    mmap_t = [r.seconds for r in rows if r.config == "mmap"]
+    base = min(mmap_t) if mmap_t else float("nan")
+    table = {}
+    for r in rows:
+        if r.config == "umap":
+            table[r.page_size] = {
+                "seconds": r.seconds,
+                "speedup_vs_mmap": base / r.seconds if r.seconds else float("nan"),
+            }
+    table["mmap_seconds"] = base
+    return table
+
+
+def print_rows(rows: List[Row]) -> None:
+    for r in rows:
+        ps = f"{r.page_size // KB}K" if r.page_size < MB else f"{r.page_size // MB}M"
+        print(f"  {r.workload:14s} {r.config:5s} page={ps:>5s} "
+              f"{r.seconds * 1e3:9.1f} ms  {r.extra}", flush=True)

@@ -1,0 +1,210 @@
+"""Roofline report (deliverable g): three terms per (arch × shape × mesh).
+
+Per cell, from the compiled dry-run artifacts (per-device SPMD module):
+
+  compute term    = flops_per_device / peak_flops          (197 TF bf16, v5e)
+  memory term     = bytes_per_device / hbm_bw              (819 GB/s)
+  collective term = collective_bytes_per_device / ici_bw   (50 GB/s/link)
+
+flops/bytes/collectives come from the trip-count-aware HLO walker
+(hlo_cost.py) — XLA's cost_analysis counts while bodies once and is recorded
+only as a cross-check.  MODEL_FLOPS uses the standard 6·N·D (dense) /
+6·N_active·D (MoE) with N from the actual parameter-shape tree.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                               [--out experiments/roofline.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import sys
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from hlo_cost import load as load_hlo  # noqa: E402
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global MODEL_FLOPS for the cell (6·N_active·tokens; fwd-only => 2·N·t)."""
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.models.common import count_params
+    import jax
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    from repro.models.transformer import param_specs
+    from repro.models.common import shapes_tree
+    import numpy as np
+
+    shapes = shapes_tree(param_specs(cfg))
+    n_total = sum(int(np.prod(s)) for s in jax.tree.leaves(
+        shapes, is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(d, int) for d in v)))
+
+    # active params for MoE: replace expert count with top_k
+    if cfg.num_experts > 0:
+        expert_params = 3 * cfg.d_model * cfg.d_ff * cfg.num_experts * cfg.num_layers
+        active_expert = expert_params * cfg.top_k / cfg.num_experts
+        n_active = n_total - expert_params + active_expert
+    else:
+        n_active = n_total
+
+    if shape.kind == "train":
+        tokens = shape.tokens
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence + attention reads (flops ~2·N_active·B)
+    return 2.0 * n_active * shape.global_batch
+
+
+def min_bytes(arch: str, shape_name: str) -> float:
+    """Global lower-bound HBM traffic per step (the 'useful bytes' analogue
+    of MODEL_FLOPS): weights read once (+optimizer traffic for training),
+    KV-cache/state read once for decode, an activations floor elsewhere."""
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.models.common import shapes_tree
+    from repro.models.transformer import param_specs
+    import jax
+    import numpy as np
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    shapes = shapes_tree(param_specs(cfg))
+    n_params = sum(int(np.prod(s)) for s in jax.tree.leaves(
+        shapes, is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(d, int) for d in v)))
+    p_bytes = 2.0 * n_params                      # bf16 weights, one pass
+
+    if shape.kind == "train":
+        # fwd read + bwd read + fp32 master/m/v read+write (AdamW)
+        opt = n_params * 4.0 * 6
+        acts = shape.tokens * cfg.d_model * 2.0 * cfg.num_layers * 4
+        return 3 * p_bytes + opt + acts
+    if shape.kind == "prefill":
+        acts = shape.tokens * cfg.d_model * 2.0 * cfg.num_layers * 4
+        return p_bytes + acts
+    # decode: weights + one pass over the valid cache/state
+    S = shape.seq_len
+    B = shape.global_batch
+    kv = 0.0
+    for seg in cfg.decoder_plan():
+        if seg.has_attention:
+            eff = min(S, seg.window) if seg.window else S
+            kv += seg.count * B * eff * cfg.num_kv_heads * cfg.head_dim * 2 * 2
+        if seg.has_mamba:
+            kv += seg.count * B * cfg.d_inner * cfg.ssm_state * 4
+        if seg.kind == "mlstm":
+            d_inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+            dk = int(cfg.mlstm_qk_factor * d_inner)
+            kv += seg.count * B * (d_inner // cfg.num_heads) * dk * 4
+    return p_bytes + kv
+
+
+def analyze_cell(json_path: Path) -> dict:
+    rec = json.loads(json_path.read_text())
+    if not rec.get("ok"):
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "ok": False}
+    hlo_path = json_path.with_suffix("").with_suffix("")  # strip .json
+    hlo_path = json_path.parent / (json_path.stem + ".hlo.gz")
+    m = load_hlo(hlo_path)
+    s = m.summary()
+    chips = rec["devices"]
+    flops_dev = s["flops_per_device"]
+    # memory term uses the TPU-fusion-optimistic traffic model (elementwise
+    # chains on-chip); the pessimistic CPU-fusion-boundary figure is recorded
+    # alongside as an upper bound
+    bytes_dev = s["bytes_optimistic_per_device"]
+    bytes_dev_pess = s["bytes_per_device"]
+    coll_dev = s["collective_total"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_dev = mf / chips
+    mb = min_bytes(rec["arch"], rec["shape"])
+    mb_dev = mb / chips
+    bound = max(terms.values())
+    # useful step time: whichever fundamental resource (required flops or
+    # required bytes) takes longer at peak rates
+    t_useful = max(mf_dev / PEAK_FLOPS, mb_dev / HBM_BW)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "ok": True, "devices": chips,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "bytes_per_device_pessimistic": bytes_dev_pess,
+        "collective_bytes_per_device": coll_dev,
+        "collective_breakdown": s["collective_bytes_per_device"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_global": mf,
+        "min_bytes_global": mb,
+        "useful_flops_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        "useful_bytes_ratio": (mb_dev / bytes_dev) if bytes_dev else 0.0,
+        # roofline fraction: fundamental step time / modeled step time
+        "roofline_fraction": t_useful / bound if bound else 0.0,
+        "xla_cost_flops_raw": rec.get("flops"),
+    }
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.csv")
+    ap.add_argument("--mesh", default=None, help="filter: pod16x16 / pod2x16x16")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for jp in sorted(Path(args.dir).glob("*.json")):
+        if args.mesh and args.mesh not in jp.name:
+            continue
+        try:
+            rows.append(analyze_cell(jp))
+        except Exception as e:  # noqa: BLE001
+            print(f"[warn] {jp.name}: {type(e).__name__}: {e}", file=sys.stderr)
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    cols = ["arch", "shape", "mesh", "devices", "bottleneck",
+            "t_compute_s", "t_memory_s", "t_collective_s",
+            "flops_per_device", "bytes_per_device",
+            "collective_bytes_per_device", "useful_flops_ratio",
+            "roofline_fraction"]
+    with out.open("w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=cols, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            if r.get("ok"):
+                w.writerow(r)
+    # also dump the full records
+    (out.with_suffix(".json")).write_text(json.dumps(rows, indent=1))
+
+    ok = [r for r in rows if r.get("ok")]
+    print(f"analyzed {len(ok)} cells -> {out}")
+    for r in sorted(ok, key=lambda r: r["roofline_fraction"])[:8]:
+        print(f"  worst: {r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} "
+              f"bottleneck={r['bottleneck']:10s} "
+              f"roofline={r["roofline_fraction"]:.3f} useful_bytes={r["useful_bytes_ratio"]:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,101 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+  sort        Fig 2   out-of-core sort page-size sweep
+  bfs         Fig 3   BFS on out-of-core CSR graph
+  lrzip       Fig 4   rolling-hash compression scan
+  asteroid    Fig 5/6 image-cube vector tracing, local vs remote store
+  nstore      Fig 7/8 YCSB KV transactions + executor scaling
+  paged_kv    (TPU transplant) KV page-size sweep, memory efficiency,
+              weight-pager readahead
+  fault_overhead  µs/fault microbenchmark feeding the PageSizeAdvisor
+
+Prints ``name,us_per_call,derived`` CSV and writes JSON rows under
+experiments/bench/.  ``--full`` runs the larger datasets; default is the
+quick configuration suitable for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _fault_overhead_rows():
+    import numpy as np
+
+    from repro.core import HostArrayStore, UMapConfig, umap, uunmap
+
+    from .common import Row
+
+    n_pages = 2000
+    ps = 4096
+    store = HostArrayStore(np.zeros(n_pages * ps, np.uint8))
+    cfg = UMapConfig(page_size=ps, buffer_size=n_pages * ps, num_fillers=4,
+                     num_evictors=1)
+    region = umap(store, config=cfg)
+    t0 = time.perf_counter()
+    for p in range(n_pages):
+        region.read(p * ps, 1)
+    dt = time.perf_counter() - t0
+    uunmap(region)
+    return [Row("fault_overhead", "umap", ps, dt,
+                {"us_per_fault": dt / n_pages * 1e6})]
+
+
+SUITES = {
+    "sort": ("bench_sort", "Fig 2"),
+    "bfs": ("bench_bfs", "Fig 3"),
+    "lrzip": ("bench_lrzip", "Fig 4"),
+    "asteroid": ("bench_asteroid", "Fig 5/6"),
+    "nstore": ("bench_nstore", "Fig 7/8"),
+    "paged_kv": ("bench_paged_kv", "TPU transplant"),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale datasets")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite subset")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from .common import print_rows, save_rows, speedup_table
+
+    print("name,us_per_call,derived")
+    all_ok = True
+    for name, (mod_name, fig) in SUITES.items():
+        if only and name not in only:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run(quick=quick)
+            save_rows(name, rows)
+            for r in rows:
+                us = r.seconds * 1e6
+                derived = ";".join(f"{k}={v}" for k, v in r.extra.items())
+                print(f"{r.workload}/{r.config}/p{r.page_size},{us:.0f},{derived}")
+            tbl = speedup_table([r for r in rows if r.workload == name])
+            if tbl.get("mmap_seconds"):
+                best = max((v["speedup_vs_mmap"]
+                            for k, v in tbl.items() if isinstance(k, int)),
+                           default=float("nan"))
+                print(f"# {name} ({fig}): best UMap speedup vs mmap = {best:.2f}x",
+                      flush=True)
+        except Exception as e:  # noqa: BLE001
+            all_ok = False
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+
+    if only is None or "fault_overhead" in (only or set()):
+        rows = _fault_overhead_rows()
+        save_rows("fault_overhead", rows)
+        r = rows[0]
+        print(f"fault_overhead,{r.seconds * 1e6:.0f},"
+              f"us_per_fault={r.extra['us_per_fault']:.1f}")
+    return 0 if all_ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

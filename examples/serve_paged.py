@@ -1,0 +1,81 @@
+"""Serving driver: continuous batching over the paged KV cache.
+
+Demonstrates the full UMap-at-the-KV-level story: page-pool allocation
+(free-list), admission watermarks on pool occupancy, per-sequence page
+tables driving the decode step, sliding-window page eviction accounting,
+and straggler requeue — while generating real tokens from a reduced
+SmolLM-family model and cross-checking a sample against unbatched decode.
+
+Run:  PYTHONPATH=src python examples/serve_paged.py [--requests 12]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as M
+from repro.configs.registry import get_smoke_config
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("smollm-135m")
+    params = M.init_params(cfg, jax.random.key(0))
+    ecfg = EngineConfig(max_batch=4, page_size=args.page_size, num_pages=256,
+                        max_pages_per_seq=32, prefill_bucket=16,
+                        admit_high_water=0.85, admit_low_water=0.60)
+    eng = ServeEngine(cfg, params, ecfg)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for rid in range(args.requests):
+        L = int(rng.integers(4, 14))
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, size=L).astype(np.int32),
+            max_new_tokens=args.max_new,
+            deadline_s=30.0))
+    eng.run_until_drained(max_steps=2000)
+    dt = time.time() - t0
+
+    done = len(eng.finished)
+    toks = sum(len(r.generated) for r in eng.finished)
+    print(f"served {done}/{args.requests} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks / dt:.1f} tok/s)")
+    print("engine stats:", eng.stats)
+    print(f"pool: {eng.allocator.used_pages} used / "
+          f"{eng.allocator.num_pages} pages "
+          f"(page = {args.page_size} tokens)")
+
+    # cross-check one request against unbatched decode
+    req = eng.finished[0]
+    toks_ref = list(req.prompt)
+    cache = M.init_cache(cfg, 1, 128)
+    _, cache = M.prefill(cfg, params,
+                         {"tokens": jnp.asarray([toks_ref[:-1]], jnp.int32)},
+                         cache)
+    cur = len(toks_ref) - 1
+    out = []
+    for _ in range(args.max_new):
+        logits, cache = M.decode_step(
+            cfg, params, cache, jnp.asarray([toks_ref[-1]], jnp.int32),
+            jnp.asarray([cur], jnp.int32))
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        toks_ref.append(nxt)
+        cur += 1
+    assert out == req.generated, "batched paged decode diverged from reference"
+    print("paged-decode cross-check OK")
+
+
+if __name__ == "__main__":
+    main()

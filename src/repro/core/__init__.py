@@ -1,0 +1,41 @@
+# UMap core: user-space page management (the paper's primary contribution).
+#
+#   config     UMapConfig + UMAP_* env parity (§4.2)
+#   store      extensible backing stores (§3.4)
+#   pagetable  page metadata / life-cycle
+#   buffer     fixed slot pool + eviction policies (§3.1, §3.6)
+#   pager      fault queue, filler/evictor pools, load balancing (§3.2–3.3)
+#   watermark  dirty-page high/low-watermark flushing (§3.5)
+#   region     umap()/uunmap() mmap-like API (§4.1)
+#   hints      access advisors, prefetch planning, page-size advisor (§3.6)
+
+from .buffer import (  # noqa: F401
+    ClockPolicy,
+    EvictionPolicy,
+    FifoPolicy,
+    LruPolicy,
+    PageBuffer,
+    SlidingWindowPolicy,
+    make_policy,
+)
+from .config import UMapConfig, parse_size  # noqa: F401
+from .hints import (  # noqa: F401
+    AccessAdvice,
+    PageSizeAdvisor,
+    StoreProfile,
+    WorkloadProfile,
+    apply_advice,
+    plan_prefetch,
+)
+from .pagetable import PageEntry, PageState, PageTable  # noqa: F401
+from .pager import PagingService, ServiceStats  # noqa: F401
+from .region import UMapArrayView, UMapRegion, umap, uunmap  # noqa: F401
+from .store import (  # noqa: F401
+    BackingStore,
+    FileStore,
+    HostArrayStore,
+    MultiFileStore,
+    RemoteStore,
+    SyntheticStore,
+)
+from .watermark import WatermarkMonitor  # noqa: F401

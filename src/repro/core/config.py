@@ -1,0 +1,177 @@
+"""UMap configuration — API + environment-variable controls (paper §4.1–4.2).
+
+Every knob from the paper's §4.2 environment-variable list is represented with
+the same name and the same default:
+
+  UMAP_PAGESIZE                       internal page size (bytes)
+  UMAP_PAGE_FILLERS                   # of read workers       (default: hw threads)
+  UMAP_PAGE_EVICTORS                  # of eviction workers   (default: hw threads)
+  UMAP_EVICT_HIGH_WATER_THRESHOLD     start evicting at this dirty ratio (default 90%)
+  UMAP_EVICT_LOW_WATER_THRESHOLD     suspend evicting below this ratio  (default 70%)
+  UMAP_BUFSIZE                        page-buffer bytes (default: 80% of available)
+  UMAP_READ_AHEAD                     pages to read ahead on a demand fill (default 0)
+  UMAP_MAX_FAULT_EVENTS               max fault events drained per poll (default: hw threads)
+
+Programmatic control mirrors the paper's ``umapcfg_set_xx`` interfaces:
+construct :class:`UMapConfig` directly or call :func:`from_env`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Optional
+
+# ---------------------------------------------------------------------------
+
+_SIZE_SUFFIXES = {
+    "k": 1024,
+    "kb": 1024,
+    "kib": 1024,
+    "m": 1024**2,
+    "mb": 1024**2,
+    "mib": 1024**2,
+    "g": 1024**3,
+    "gb": 1024**3,
+    "gib": 1024**3,
+}
+
+
+def parse_size(text: str | int) -> int:
+    """Parse ``"64K"``/``"8M"``/``"1GiB"``/plain-int size strings to bytes."""
+    if isinstance(text, int):
+        return text
+    s = str(text).strip().lower()
+    for suffix in sorted(_SIZE_SUFFIXES, key=len, reverse=True):
+        if s.endswith(suffix):
+            return int(float(s[: -len(suffix)]) * _SIZE_SUFFIXES[suffix])
+    return int(s)
+
+
+def _hw_threads() -> int:
+    return os.cpu_count() or 1
+
+
+def _available_memory_bytes() -> int:
+    """Best-effort available physical memory (for the UMAP_BUFSIZE default)."""
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return 8 * 1024**3
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UMapConfig:
+    """Per-region page-management configuration (paper §3.6, §4).
+
+    ``page_size`` is the *internal UMap page* — the finest granularity of data
+    movement between the backing store and the page buffer.  It is the
+    paper's central performance knob (§6: optimal values ranged from 32 KiB
+    for N-Store to 8 MiB for umapsort).
+    """
+
+    # --- geometry -----------------------------------------------------------
+    page_size: int = 4096                    # UMAP_PAGESIZE (bytes)
+    buffer_size: int = 64 * 1024**2          # UMAP_BUFSIZE (bytes of page buffer)
+
+    # --- worker pools (I/O decoupling, §3.2) --------------------------------
+    num_fillers: int = dataclasses.field(default_factory=_hw_threads)
+    num_evictors: int = dataclasses.field(default_factory=_hw_threads)
+    max_fault_events: int = dataclasses.field(default_factory=_hw_threads)
+
+    # --- dirty-page watermarks (§3.5) ---------------------------------------
+    evict_high_water: float = 0.90           # start background flush
+    evict_low_water: float = 0.70            # suspend background flush
+
+    # --- policies (§3.6) ----------------------------------------------------
+    read_ahead: int = 0                      # pages prefetched past a demand fill
+    eviction_policy: str = "lru"             # "fifo" | "lru" | "clock" | "swa"
+    # Optional app-supplied fault resolver (paper §4: plugin/callback arch —
+    # the asteroid FITS handler uses this).  Signature: (page_no, buf) -> None
+    fill_callback: Optional[Callable] = None
+
+    # --- mmap-baseline emulation --------------------------------------------
+    # When True, the pager is frozen to kernel-mmap semantics: 4 KiB pages,
+    # synchronous fault resolution, heuristic seq/random readahead, and an
+    # aggressive 10%-dirty flush threshold (RHEL default per paper §3.5).
+    mmap_compat: bool = False
+
+    def __post_init__(self):
+        if self.page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {self.page_size}")
+        if self.buffer_size < self.page_size:
+            raise ValueError(
+                f"buffer_size ({self.buffer_size}) < page_size ({self.page_size})"
+            )
+        if not (0.0 < self.evict_low_water <= self.evict_high_water <= 1.0):
+            raise ValueError(
+                "watermarks must satisfy 0 < low <= high <= 1, got "
+                f"low={self.evict_low_water} high={self.evict_high_water}"
+            )
+        if self.num_fillers < 1 or self.num_evictors < 1:
+            raise ValueError("need at least one filler and one evictor")
+
+    @property
+    def num_slots(self) -> int:
+        """Number of page slots in the buffer."""
+        return max(1, self.buffer_size // self.page_size)
+
+    def replace(self, **kw) -> "UMapConfig":
+        return dataclasses.replace(self, **kw)
+
+    # --- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_env(cls, env: Optional[dict] = None, **overrides) -> "UMapConfig":
+        """Build a config from ``UMAP_*`` environment variables (paper §4.2)."""
+        env = dict(os.environ if env is None else env)
+        kw = {}
+        if "UMAP_PAGESIZE" in env:
+            kw["page_size"] = parse_size(env["UMAP_PAGESIZE"])
+        if "UMAP_BUFSIZE" in env:
+            kw["buffer_size"] = parse_size(env["UMAP_BUFSIZE"])
+        else:
+            kw["buffer_size"] = int(0.8 * _available_memory_bytes())
+        if "UMAP_PAGE_FILLERS" in env:
+            kw["num_fillers"] = int(env["UMAP_PAGE_FILLERS"])
+        if "UMAP_PAGE_EVICTORS" in env:
+            kw["num_evictors"] = int(env["UMAP_PAGE_EVICTORS"])
+        if "UMAP_EVICT_HIGH_WATER_THRESHOLD" in env:
+            kw["evict_high_water"] = float(env["UMAP_EVICT_HIGH_WATER_THRESHOLD"]) / 100.0
+        if "UMAP_EVICT_LOW_WATER_THRESHOLD" in env:
+            kw["evict_low_water"] = float(env["UMAP_EVICT_LOW_WATER_THRESHOLD"]) / 100.0
+        if "UMAP_READ_AHEAD" in env:
+            kw["read_ahead"] = int(env["UMAP_READ_AHEAD"])
+        if "UMAP_MAX_FAULT_EVENTS" in env:
+            kw["max_fault_events"] = int(env["UMAP_MAX_FAULT_EVENTS"])
+        kw.update(overrides)
+        return cls(**kw)
+
+    @classmethod
+    def mmap_baseline(cls, buffer_size: int, **overrides) -> "UMapConfig":
+        """The 'system service' baseline the paper compares against (§6).
+
+        Kernel-mmap semantics: fixed 4 KiB pages, fault resolved synchronously
+        on the faulting thread (one implicit filler), heuristic readahead, and
+        flush-at-10%-dirty.
+        """
+        kw = dict(
+            page_size=4096,
+            buffer_size=buffer_size,
+            num_fillers=1,
+            num_evictors=1,
+            evict_high_water=0.10,
+            evict_low_water=0.05,
+            read_ahead=0,          # heuristic readahead handled by pager
+            eviction_policy="lru",
+            mmap_compat=True,
+        )
+        kw.update(overrides)
+        return cls(**kw)

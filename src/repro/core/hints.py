@@ -1,0 +1,141 @@
+"""Application hints: access advisors + page-size advisor (paper §3.6).
+
+The paper's argument is that the *application* knows its access pattern and
+should drive prefetching and page-size selection.  This module packages the
+hint vocabulary:
+
+  * :class:`AccessAdvice` — madvise-style per-region advice that maps to a
+    concrete (readahead, eviction-policy) setting.
+  * :func:`plan_prefetch` — turn an application-supplied iterator of future
+    offsets into page sets, deduplicated and windowed, for
+    ``region.prefetch_pages`` (irregular patterns welcome — §3.6: "UMap could
+    prefetch a set of arbitrary pages into memory").
+  * :class:`PageSizeAdvisor` — the napkin model behind the paper's page-size
+    sweeps: given a store's latency/bandwidth and the workload's expected
+    useful fraction per page, estimate time-per-useful-byte and recommend a
+    page size.  (Benchmarks sweep real page sizes; the advisor documents the
+    reasoning and provides a starting point.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterable, List, Sequence
+
+from .config import UMapConfig
+
+
+class AccessAdvice(enum.Enum):
+    NORMAL = "normal"
+    SEQUENTIAL = "sequential"   # deep readahead, forward-moving eviction
+    RANDOM = "random"           # no readahead, LRU
+    WILLNEED = "willneed"       # caller will prefetch explicitly
+    STREAMING = "streaming"     # sequential + evict-behind (no reuse)
+
+
+ADVICE_SETTINGS = {
+    AccessAdvice.NORMAL: dict(read_ahead=0, eviction_policy="lru"),
+    AccessAdvice.SEQUENTIAL: dict(read_ahead=8, eviction_policy="lru"),
+    AccessAdvice.RANDOM: dict(read_ahead=0, eviction_policy="lru"),
+    AccessAdvice.WILLNEED: dict(read_ahead=0, eviction_policy="lru"),
+    AccessAdvice.STREAMING: dict(read_ahead=16, eviction_policy="swa"),
+}
+
+
+def apply_advice(config: UMapConfig, advice: AccessAdvice) -> UMapConfig:
+    return config.replace(**ADVICE_SETTINGS[advice])
+
+
+def plan_prefetch(
+    offsets: Iterable[int], page_size: int, max_pages: int = 256
+) -> List[int]:
+    """Future byte offsets -> deduplicated, bounded page list (in first-need order)."""
+    seen, plan = set(), []
+    for off in offsets:
+        pno = off // page_size
+        if pno not in seen:
+            seen.add(pno)
+            plan.append(pno)
+            if len(plan) >= max_pages:
+                break
+    return plan
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StoreProfile:
+    """Per-operation latency + streaming bandwidth of a backing store."""
+
+    latency_s: float
+    bandwidth_Bps: float
+
+    # Representative tiers (paper §3.2 quotes PM 100–500ns, NVMe ~20µs,
+    # HDD ~ms; bandwidths are realistic per-device figures).
+    @classmethod
+    def nvme(cls):
+        return cls(20e-6, 3e9)
+
+    @classmethod
+    def ssd_sata(cls):
+        return cls(80e-6, 500e6)
+
+    @classmethod
+    def lustre_hdd(cls):
+        return cls(5e-3, 200e6)
+
+    @classmethod
+    def pmem(cls):
+        return cls(300e-9, 10e9)
+
+
+@dataclasses.dataclass
+class WorkloadProfile:
+    """What the app knows: how much of each fetched page it will touch."""
+
+    useful_bytes_per_access: int      # bytes the app actually consumes per touch
+    locality_bytes: int               # span within which accesses cluster
+    #  sort: locality ~ page (partition passes) -> big pages amortize faults
+    #  nstore/YCSB: random keys, locality ~ record -> small pages win
+
+
+class PageSizeAdvisor:
+    """Cost model: t(page) = fault_overhead + latency + page/bandwidth, amortized
+    over expected useful bytes min(page, locality).  Recommends the page size
+    minimizing time per useful byte."""
+
+    #: software fault-resolution overhead per fault (queue + wake + metadata);
+    #: measured on this container by benchmarks/bench_fault_overhead.
+    FAULT_OVERHEAD_S = 30e-6
+
+    def __init__(self, store: StoreProfile, workload: WorkloadProfile):
+        self.store = store
+        self.workload = workload
+
+    def time_per_useful_byte(self, page_size: int) -> float:
+        useful = min(page_size, max(self.workload.locality_bytes,
+                                    self.workload.useful_bytes_per_access))
+        t = self.FAULT_OVERHEAD_S + self.store.latency_s + page_size / self.store.bandwidth_Bps
+        return t / useful
+
+    def recommend(self, candidates: Sequence[int] = tuple(4096 * 2**i for i in range(12))) -> int:
+        return min(candidates, key=self.time_per_useful_byte)
+
+    def sweep(self, candidates: Sequence[int]) -> dict:
+        return {p: self.time_per_useful_byte(p) for p in candidates}
+
+
+def bandwidth_delay_pages(store: StoreProfile, page_size: int) -> int:
+    """Filler concurrency needed to saturate the store (sizing §3.2 pools).
+
+    Little's law: in-flight ops = bandwidth × latency / page_size, i.e. the
+    bandwidth-delay product in pages (+1 so the pipe never drains).  With
+    20 µs NVMe latency and 4 KiB pages that is ~16 fillers; at 1 MiB pages a
+    single filler saturates — why the paper's best filler counts shrink as
+    page size grows (§6.1).
+    """
+    transfer_s = page_size / store.bandwidth_Bps
+    return max(1, math.ceil(store.latency_s / transfer_s) + 1)

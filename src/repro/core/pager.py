@@ -1,0 +1,436 @@
+"""Paging service: fault queue + filler/evictor pools (paper §3.1–3.3).
+
+Structure (mirrors Figure 1 of the paper):
+
+  * Application threads touching a region post *fault events* into a FIFO
+    work queue and block on the page's event (the userfaultfd analogue: the
+    faulting thread sleeps; it is woken only after the page is atomically
+    installed — UFFDIO_COPY semantics).
+  * A configurable pool of **fillers** drains the shared queue.  Because the
+    queue is shared across *all* regions, hot regions naturally receive more
+    workers — the paper's dynamic load balancing (§3.3, work-stealing style).
+  * A pool of **evictors** serves write-back work: watermark-triggered dirty
+    flushes (§3.5) and capacity evictions.
+  * A low-concurrency **manager** (here: the watermark monitor thread, see
+    watermark.py) polls buffer state, mirroring the paper's manager threads
+    that poll the kernel for tracked events.
+
+I/O always happens *outside* the metadata lock, so fillers genuinely overlap
+on stores whose reads release the GIL (file I/O, remote-latency sleeps).
+
+The ``mmap_compat`` configuration freezes this machinery to kernel-mmap
+semantics (synchronous resolution on the faulting thread, heuristic
+readahead, 10%-dirty flush) and is the paper's comparison baseline.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, TYPE_CHECKING
+
+from .buffer import PageBuffer, make_policy
+from .config import UMapConfig
+from .pagetable import PageEntry, PageKey, PageState, PageTable
+from .watermark import WatermarkMonitor
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .region import UMapRegion
+
+
+@dataclass
+class ServiceStats:
+    demand_faults: int = 0
+    prefetch_fills: int = 0
+    prefetch_hits: int = 0          # prefetched pages later touched
+    page_hits: int = 0              # touches that found the page present
+    wait_hits: int = 0              # touches that waited on an in-flight fill
+    evictions: int = 0
+    writebacks: int = 0
+    watermark_flushes: int = 0
+    fill_queue_peak: int = 0
+    per_filler_fills: Dict[int, int] = field(default_factory=dict)
+
+    def snapshot(self) -> dict:
+        d = {k: v for k, v in self.__dict__.items() if k != "per_filler_fills"}
+        d["per_filler_fills"] = dict(self.per_filler_fills)
+        return d
+
+
+class _FillWork:
+    __slots__ = ("region", "entry")
+
+    def __init__(self, region: "UMapRegion", entry: PageEntry):
+        self.region = region
+        self.entry = entry
+
+
+_SHUTDOWN = object()
+
+
+class PagingService:
+    """Shared buffer + worker pools serving one or more UMap regions."""
+
+    def __init__(self, config: UMapConfig):
+        self.config = config
+        self.lock = threading.RLock()
+        self.cond = threading.Condition(self.lock)   # slot availability
+        self.table = PageTable()
+        self.buffer = PageBuffer(config.num_slots, config.page_size)
+        self.policy = make_policy(config.eviction_policy)
+        self.stats = ServiceStats()
+        self._regions: Dict[int, "UMapRegion"] = {}
+        self._next_region_id = 0
+        self._closed = False
+
+        self._fill_q: "queue.Queue" = queue.Queue()
+        self._evict_q: "queue.Queue" = queue.Queue()
+
+        # Kernel-mmap fidelity: Linux serializes fault handling per address
+        # space on mmap_sem — the scalability bottleneck the paper's related
+        # work ([16], DI-MMAP) documents.  The mmap baseline reproduces it;
+        # UMap's whole point is that its fill path does not take such a lock.
+        self._mmap_sem = threading.Lock() if config.mmap_compat else None
+
+        self._fillers: List[threading.Thread] = []
+        self._evictors: List[threading.Thread] = []
+        if not config.mmap_compat:
+            for i in range(config.num_fillers):
+                t = threading.Thread(target=self._filler_loop, args=(i,),
+                                     name=f"umap-filler-{i}", daemon=True)
+                t.start()
+                self._fillers.append(t)
+        for i in range(config.num_evictors):
+            t = threading.Thread(target=self._evictor_loop, args=(i,),
+                                 name=f"umap-evictor-{i}", daemon=True)
+            t.start()
+            self._evictors.append(t)
+
+        # The "manager": monitors dirty ratio against the watermarks and
+        # posts flush batches to the evictor queue (paper §3.5).
+        self.watermark = WatermarkMonitor(self)
+        self.watermark.start()
+
+    # ------------------------------------------------------------------ API
+
+    def register(self, region: "UMapRegion") -> int:
+        with self.lock:
+            rid = self._next_region_id
+            self._next_region_id += 1
+            self._regions[rid] = region
+            return rid
+
+    def unregister(self, region: "UMapRegion") -> None:
+        self.flush_region(region, evict=True)
+        with self.lock:
+            self._regions.pop(region.region_id, None)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        for region in list(self._regions.values()):
+            self.flush_region(region, evict=False)
+        self._closed = True
+        self.watermark.stop()
+        for _ in self._fillers:
+            self._fill_q.put(_SHUTDOWN)
+        for _ in self._evictors:
+            self._evict_q.put(_SHUTDOWN)
+        for t in self._fillers + self._evictors:
+            t.join(timeout=5.0)
+
+    # --------------------------------------------------------- fault path
+
+    def request_fills(self, region: "UMapRegion", page_nos: List[int],
+                      demand: bool = True) -> None:
+        """Post fill work for absent pages (no pinning, no waiting).
+
+        Issuing all fills for a multi-page request up front keeps the filler
+        pool busy (I/O overlap); the caller then pins/copies one page at a
+        time via :meth:`acquire_one`, which bounds pins-per-thread to one and
+        makes the pager deadlock-free under any buffer size.
+        """
+        to_fill: List[PageEntry] = []
+        with self.lock:
+            for pno in page_nos:
+                key = (region.region_id, pno)
+                if self.table.get(key) is None:
+                    e = self.table.insert_filling(key)
+                    if demand:
+                        self.stats.demand_faults += 1
+                    else:
+                        e.prefetched = True
+                    to_fill.append(e)
+            ra_fill = (self._post_readahead(region, page_nos)
+                       if demand and region.readahead_pages > 0 else [])
+        for e in to_fill + ra_fill:
+            self._dispatch_fill(region, e)
+
+    def acquire_one(self, region: "UMapRegion", page_no: int) -> PageEntry:
+        """Pin one page, faulting it in if needed (userfaultfd-style block).
+
+        The caller must not hold any other pins (deadlock-freedom invariant).
+        """
+        key = (region.region_id, page_no)
+        first_attempt = True
+        while True:
+            dispatch: Optional[PageEntry] = None
+            waitee: Optional[PageEntry] = None
+            with self.lock:
+                e = self.table.get(key)
+                if e is None:
+                    e = self.table.insert_filling(key)
+                    self.stats.demand_faults += 1
+                    dispatch = e
+                    waitee = e
+                elif e.state is PageState.PRESENT:
+                    e.pins += 1
+                    self.policy.on_touch(key)
+                    if first_attempt:
+                        self.stats.page_hits += 1
+                    else:
+                        self.stats.wait_hits += 1
+                    if e.prefetched and not e.touched_after_prefetch:
+                        e.touched_after_prefetch = True
+                        self.stats.prefetch_hits += 1
+                    return e
+                else:  # FILLING / CLEANING / EVICTING
+                    waitee = e
+            if dispatch is not None:
+                self._dispatch_fill(region, dispatch)
+            waitee.event.wait(timeout=0.05)
+            first_attempt = False
+
+    def _dispatch_fill(self, region: "UMapRegion", entry: PageEntry) -> None:
+        if self.config.mmap_compat:
+            self._do_fill(region, entry, worker_id=-1)
+        else:
+            self._submit_fill(region, entry)
+
+    def release_one(self, entry: PageEntry) -> None:
+        with self.lock:
+            entry.pins -= 1
+            assert entry.pins >= 0, f"pin underflow on {entry.key}"
+            self.cond.notify_all()
+
+    def mark_dirty_one(self, entry: PageEntry) -> None:
+        with self.lock:
+            self.table.mark_dirty(entry)
+        self.watermark.poke()
+
+    # ------------------------------------------------------ prefetch (§3.6)
+
+    def prefetch(self, region: "UMapRegion", page_nos: List[int]) -> int:
+        """App-driven prefetch of an *arbitrary* page set (paper §3.6)."""
+        to_fill: List[PageEntry] = []
+        with self.lock:
+            for pno in page_nos:
+                key = (region.region_id, pno)
+                if self.table.get(key) is not None:
+                    continue
+                e = self.table.insert_filling(key)
+                e.prefetched = True
+                to_fill.append(e)
+        for e in to_fill:
+            self._dispatch_fill(region, e)
+        return len(to_fill)
+
+    def _post_readahead(self, region: "UMapRegion", faulted: List[int]) -> List[PageEntry]:
+        """Fixed-window readahead past demand faults (UMAP_READ_AHEAD).
+
+        Called under the lock; returns the new entries for the caller to
+        dispatch outside the lock.
+        """
+        last = max(faulted)
+        npages = region.num_pages
+        out: List[PageEntry] = []
+        for pno in range(last + 1, min(last + 1 + region.readahead_pages, npages)):
+            key = (region.region_id, pno)
+            if self.table.get(key) is None:
+                e = self.table.insert_filling(key)
+                e.prefetched = True
+                out.append(e)
+        return out
+
+    # --------------------------------------------------------- fill workers
+
+    def _submit_fill(self, region: "UMapRegion", entry: PageEntry) -> None:
+        self._fill_q.put(_FillWork(region, entry))
+        self.stats.fill_queue_peak = max(self.stats.fill_queue_peak,
+                                         self._fill_q.qsize())
+
+    def _filler_loop(self, worker_id: int) -> None:
+        while True:
+            work = self._fill_q.get()
+            if work is _SHUTDOWN:
+                return
+            try:
+                self._do_fill(work.region, work.entry, worker_id)
+            except Exception:  # pragma: no cover - keep the pool alive
+                import traceback
+                traceback.print_exc()
+                with self.lock:
+                    work.entry.event.set()
+
+    def _do_fill(self, region: "UMapRegion", entry: PageEntry, worker_id: int) -> None:
+        if self._mmap_sem is not None:
+            with self._mmap_sem:
+                self._do_fill_inner(region, entry, worker_id)
+        else:
+            self._do_fill_inner(region, entry, worker_id)
+
+    def _do_fill_inner(self, region: "UMapRegion", entry: PageEntry,
+                       worker_id: int) -> None:
+        slot = self._alloc_slot_evicting(entry.key)
+        nbytes = region.page_nbytes(entry.key[1])
+        buf = self.buffer.slot_view(slot, self.buffer.slot_size)
+        # I/O outside the lock.
+        if region.fill_callback is not None:
+            region.fill_callback(entry.key[1], buf[:nbytes])
+        else:
+            region.store.read_into(entry.key[1] * region.page_size, buf[:nbytes])
+        with self.lock:
+            self.table.install(entry, slot)
+            self.policy.on_install(entry.key)
+            if entry.prefetched:
+                self.stats.prefetch_fills += 1
+            if worker_id >= 0:
+                pf = self.stats.per_filler_fills
+                pf[worker_id] = pf.get(worker_id, 0) + 1
+            self.cond.notify_all()
+
+    def _alloc_slot_evicting(self, key: PageKey) -> int:
+        """Get a free slot, evicting (write-back if dirty) when full."""
+        while True:
+            victim: Optional[PageEntry] = None
+            with self.lock:
+                slot = self.buffer.try_alloc(key)
+                if slot is not None:
+                    return slot
+                victims = self.policy.pick_victims(1, self._evictable_key)
+                if victims:
+                    victim = self.table.get(victims[0])
+                    victim.state = PageState.EVICTING
+                    victim.event.clear()
+                    self.policy.on_remove(victim.key)
+                else:
+                    # Everything pinned/in-flight: wait for a release.
+                    self.cond.wait(timeout=0.1)
+                    continue
+            self._evict_now(victim)
+
+    def _evictable_key(self, key: PageKey) -> bool:
+        e = self.table.get(key)
+        return e is not None and self.table.evictable(e)
+
+    def _evict_now(self, victim: PageEntry) -> None:
+        """Write back (if dirty) and free the victim's slot. Lock not held."""
+        region = self._regions[victim.key[0]]
+        if victim.dirty:
+            nbytes = region.page_nbytes(victim.key[1])
+            buf = self.buffer.slot_view(victim.slot, nbytes)
+            region.store.write_from(victim.key[1] * region.page_size, buf)
+            self.stats.writebacks += 1
+        with self.lock:
+            self.buffer.free(victim.slot)
+            self.table.remove(victim)
+            self.stats.evictions += 1
+            self.cond.notify_all()
+
+    # ------------------------------------------------------- evict workers
+
+    def _evictor_loop(self, worker_id: int) -> None:
+        while True:
+            work = self._evict_q.get()
+            if work is _SHUTDOWN:
+                return
+            kind, payload = work
+            try:
+                if kind == "clean":
+                    self._do_clean(payload)
+                elif kind == "evict":
+                    self._evict_now(payload)
+            except Exception:  # pragma: no cover
+                import traceback
+                traceback.print_exc()
+
+    def _do_clean(self, entry: PageEntry) -> None:
+        """Write a dirty page back to its store; page stays resident."""
+        region = self._regions.get(entry.key[0])
+        if region is None:
+            return
+        nbytes = region.page_nbytes(entry.key[1])
+        buf = self.buffer.slot_view(entry.slot, nbytes)
+        region.store.write_from(entry.key[1] * region.page_size, buf)
+        with self.lock:
+            if entry.state is PageState.CLEANING:
+                entry.state = PageState.PRESENT
+            self.table.mark_clean(entry)
+            self.stats.writebacks += 1
+            entry.event.set()
+            self.cond.notify_all()
+
+    def submit_clean_batch(self, max_pages: int) -> int:
+        """Queue up to ``max_pages`` dirty pages for write-back (watermarks)."""
+        posted = 0
+        with self.lock:
+            for key in self.table.resident_keys():
+                e = self.table.get(key)
+                if e is not None and e.dirty and e.state is PageState.PRESENT:
+                    e.state = PageState.CLEANING
+                    e.event.clear()
+                    self._evict_q.put(("clean", e))
+                    posted += 1
+                    if posted >= max_pages:
+                        break
+            if posted:
+                self.stats.watermark_flushes += 1
+        return posted
+
+    # -------------------------------------------------------------- flush
+
+    def flush_region(self, region: "UMapRegion", evict: bool = False) -> None:
+        """Synchronously write back all dirty pages of a region (§3.5).
+
+        With ``evict=True`` also drops the pages (uunmap path).
+        """
+        while True:
+            batch: List[PageEntry] = []
+            with self.lock:
+                for e in self.table.region_entries(region.region_id):
+                    if e.state is PageState.PRESENT and (e.dirty or evict) and e.pins == 0:
+                        e.state = PageState.EVICTING if evict else PageState.CLEANING
+                        e.event.clear()
+                        if evict:
+                            self.policy.on_remove(e.key)
+                        batch.append(e)
+                pending = any(
+                    e.state in (PageState.FILLING, PageState.CLEANING, PageState.EVICTING)
+                    or e.pins > 0
+                    for e in self.table.region_entries(region.region_id)
+                ) if not batch else True
+            if not batch:
+                if not pending:
+                    break
+                import time as _t
+                _t.sleep(0.001)
+                continue
+            for e in batch:
+                if evict:
+                    self._evict_now(e)
+                else:
+                    self._do_clean(e)
+        region.store.flush()
+
+    # ------------------------------------------------------------- queries
+
+    def dirty_ratio(self) -> float:
+        with self.lock:
+            return self.table.dirty_count / max(1, self.buffer.num_slots)
+
+    def resident_pages(self, region_id: Optional[int] = None) -> int:
+        with self.lock:
+            if region_id is None:
+                return len(self.table.resident_keys())
+            return sum(1 for (rid, _) in self.table.resident_keys() if rid == region_id)

@@ -1,0 +1,103 @@
+"""User-space page table (paper §3.1/§3.3).
+
+One :class:`PageTable` instance serves *all* regions attached to a paging
+service (the paper's "single UMap buffer object [that manages] the metadata of
+in-memory pages for all regions").  Keys are ``(region_id, page_no)``.
+
+Page life-cycle::
+
+    ABSENT --fault--> FILLING --install--> PRESENT --victim--> EVICTING --> ABSENT
+                                              |  ^
+                                   (dirty) CLEANING  (write-back, stays resident)
+
+The table itself is not thread-safe; the owning service serializes metadata
+mutations under one lock and performs I/O outside it.
+"""
+
+from __future__ import annotations
+
+import enum
+import threading
+from typing import Dict, Optional, Tuple
+
+PageKey = Tuple[int, int]  # (region_id, page_no)
+
+
+class PageState(enum.Enum):
+    FILLING = "filling"
+    PRESENT = "present"
+    CLEANING = "cleaning"   # dirty write-back in flight; remains resident
+    EVICTING = "evicting"
+
+
+class PageEntry:
+    __slots__ = (
+        "key", "state", "slot", "dirty", "pins", "event",
+        "prefetched", "touched_after_prefetch",
+    )
+
+    def __init__(self, key: PageKey, state: PageState, slot: int = -1):
+        self.key = key
+        self.state = state
+        self.slot = slot
+        self.dirty = False
+        self.pins = 0
+        # Signaled when the page becomes PRESENT (UFFDIO_COPY semantics: wake
+        # waiters only after the full page is installed) or when CLEANING /
+        # EVICTING completes.
+        self.event = threading.Event()
+        self.prefetched = False           # filled by readahead, not demand
+        self.touched_after_prefetch = False
+
+    def __repr__(self):  # pragma: no cover
+        return (f"PageEntry({self.key}, {self.state.value}, slot={self.slot}, "
+                f"dirty={self.dirty}, pins={self.pins})")
+
+
+class PageTable:
+    def __init__(self):
+        self._entries: Dict[PageKey, PageEntry] = {}
+        self.dirty_count = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: PageKey) -> Optional[PageEntry]:
+        return self._entries.get(key)
+
+    def insert_filling(self, key: PageKey) -> PageEntry:
+        assert key not in self._entries, f"duplicate page-table entry {key}"
+        e = PageEntry(key, PageState.FILLING)
+        self._entries[key] = e
+        return e
+
+    def install(self, entry: PageEntry, slot: int) -> None:
+        """FILLING -> PRESENT with physical slot; wakes all fault waiters."""
+        assert entry.state is PageState.FILLING
+        entry.slot = slot
+        entry.state = PageState.PRESENT
+        entry.event.set()
+
+    def mark_dirty(self, entry: PageEntry) -> None:
+        if not entry.dirty:
+            entry.dirty = True
+            self.dirty_count += 1
+
+    def mark_clean(self, entry: PageEntry) -> None:
+        if entry.dirty:
+            entry.dirty = False
+            self.dirty_count -= 1
+
+    def remove(self, entry: PageEntry) -> None:
+        self.mark_clean(entry)
+        del self._entries[entry.key]
+        entry.event.set()
+
+    def resident_keys(self):
+        return [k for k, e in self._entries.items() if e.state is PageState.PRESENT]
+
+    def evictable(self, entry: PageEntry) -> bool:
+        return entry.state is PageState.PRESENT and entry.pins == 0
+
+    def region_entries(self, region_id: int):
+        return [e for k, e in self._entries.items() if k[0] == region_id]

@@ -1,0 +1,314 @@
+"""Backing-store abstraction (paper §3.4 — "Extensible Back Store").
+
+A :class:`BackingStore` presents a flat byte space plus page-granular
+``read_into`` / ``write_from`` access functions.  UMap regions attach one
+store; fillers/evictors call only this interface, so new storage tiers (local
+SSD, Lustre, memory server, FITS multi-file sets) are added by defining a new
+store object — exactly the paper's extensibility argument.
+
+Provided stores:
+
+  FileStore        a single file on disk, accessed with positioned I/O
+                   (os.pread/os.pwrite — releases the GIL, so filler threads
+                   genuinely overlap I/O).
+  MultiFileStore   several (file, offset, length) extents mapped into one
+                   contiguous space (paper §4.1 "multi-file backed region";
+                   the asteroid-detection FITS cube uses this).
+  HostArrayStore   an in-memory numpy buffer (the "memory server" case and
+                   the unit-test store).
+  RemoteStore      wraps another store and models link latency + bandwidth
+                   (network-interconnected HDD / Lustre in the paper's Intel
+                   testbed).
+  SyntheticStore   procedurally generated contents (no disk footprint) for
+                   very large logical spaces.
+"""
+
+from __future__ import annotations
+
+import abc
+import os
+import threading
+import time
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+
+class BackingStore(abc.ABC):
+    """Flat byte space with positioned read/write."""
+
+    @property
+    @abc.abstractmethod
+    def size(self) -> int:
+        """Total logical size in bytes."""
+
+    @abc.abstractmethod
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        """Read ``len(buf)`` bytes at ``offset`` into ``buf`` (uint8 view).
+
+        Reads past EOF zero-fill.  Returns bytes actually read from the store.
+        """
+
+    @abc.abstractmethod
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        """Write ``len(buf)`` bytes from ``buf`` at ``offset``."""
+
+    def flush(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def close(self) -> None:  # pragma: no cover - default no-op
+        pass
+
+    # --- instrumentation ----------------------------------------------------
+    def reset_stats(self) -> None:
+        self.bytes_read = 0
+        self.bytes_written = 0
+        self.num_reads = 0
+        self.num_writes = 0
+
+    def _count_read(self, n: int) -> None:
+        self.bytes_read = getattr(self, "bytes_read", 0) + n
+        self.num_reads = getattr(self, "num_reads", 0) + 1
+
+    def _count_write(self, n: int) -> None:
+        self.bytes_written = getattr(self, "bytes_written", 0) + n
+        self.num_writes = getattr(self, "num_writes", 0) + 1
+
+
+# ---------------------------------------------------------------------------
+
+
+class FileStore(BackingStore):
+    """Single-file store using positioned I/O on a raw fd."""
+
+    def __init__(self, path: str, size: int | None = None, create: bool = False):
+        self.path = str(path)
+        flags = os.O_RDWR | (os.O_CREAT if create else 0)
+        self._fd = os.open(self.path, flags, 0o644)
+        if size is not None and create:
+            os.ftruncate(self._fd, size)
+        self._size = size if size is not None else os.fstat(self._fd).st_size
+        self.reset_stats()
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        want = buf.nbytes
+        got = 0
+        mv = memoryview(buf).cast("B")
+        while got < want:
+            chunk = os.pread(self._fd, min(want - got, 1 << 24), offset + got)
+            if not chunk:
+                break  # EOF — zero-fill the tail
+            mv[got : got + len(chunk)] = chunk
+            got += len(chunk)
+        if got < want:
+            mv[got:] = b"\x00" * (want - got)
+        self._count_read(got)
+        return got
+
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        mv = memoryview(buf).cast("B")
+        done = 0
+        while done < len(mv):
+            done += os.pwrite(self._fd, mv[done:], offset + done)
+        self._count_write(done)
+        return done
+
+    def flush(self) -> None:
+        os.fsync(self._fd)
+
+    def close(self) -> None:
+        try:
+            os.close(self._fd)
+        except OSError:
+            pass
+
+
+class MultiFileStore(BackingStore):
+    """Maps a set of file extents into one contiguous logical space.
+
+    Paper §4.1: "Given a set of files, each with individual offsets and size,
+    UMap maps them into a contiguous memory region."  A read that spans
+    extents is split across the member stores (a page fault may require data
+    from multiple files — paper §6.4).
+    """
+
+    def __init__(self, extents: Sequence[Tuple[BackingStore, int, int]]):
+        # extents: (store, store_offset, length)
+        self._extents: List[Tuple[BackingStore, int, int, int]] = []
+        logical = 0
+        for store, off, length in extents:
+            self._extents.append((store, off, length, logical))
+            logical += length
+        self._size = logical
+        self.reset_stats()
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def _segments(self, offset: int, length: int):
+        """Yield (store, store_off, buf_off, n) covering [offset, offset+length)."""
+        for store, s_off, s_len, l_off in self._extents:
+            lo = max(offset, l_off)
+            hi = min(offset + length, l_off + s_len)
+            if lo < hi:
+                yield store, s_off + (lo - l_off), lo - offset, hi - lo
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        mv = buf.view(np.uint8)
+        got = 0
+        for store, s_off, b_off, n in self._segments(offset, buf.nbytes):
+            got += store.read_into(s_off, mv[b_off : b_off + n])
+        if got < buf.nbytes:
+            pass  # gaps/past-EOF zero-filled by member stores or left as-is
+        self._count_read(got)
+        return got
+
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        mv = buf.view(np.uint8)
+        done = 0
+        for store, s_off, b_off, n in self._segments(offset, buf.nbytes):
+            done += store.write_from(s_off, mv[b_off : b_off + n])
+        self._count_write(done)
+        return done
+
+    def flush(self) -> None:
+        for store, *_ in self._extents:
+            store.flush()
+
+    def close(self) -> None:
+        for store, *_ in self._extents:
+            store.close()
+
+
+class HostArrayStore(BackingStore):
+    """In-memory store over a numpy byte buffer (memory-server analogue)."""
+
+    def __init__(self, data: np.ndarray):
+        self._data = data.view(np.uint8).reshape(-1)
+        self._lock = threading.Lock()
+        self.reset_stats()
+
+    @property
+    def size(self) -> int:
+        return self._data.nbytes
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        mv = buf.view(np.uint8)
+        n = max(0, min(mv.nbytes, self._data.nbytes - offset))
+        mv[:n] = self._data[offset : offset + n]
+        if n < mv.nbytes:
+            mv[n:] = 0
+        self._count_read(n)
+        return n
+
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        mv = buf.view(np.uint8)
+        n = max(0, min(mv.nbytes, self._data.nbytes - offset))
+        with self._lock:
+            self._data[offset : offset + n] = mv[:n]
+        self._count_write(n)
+        return n
+
+
+class RemoteStore(BackingStore):
+    """Latency/bandwidth-modeled wrapper (Lustre / network HDD tier, §5).
+
+    Each operation sleeps ``latency_s + bytes / bandwidth_Bps`` *outside* the
+    wrapped store's own cost.  time.sleep releases the GIL, so concurrent
+    fillers genuinely overlap remote reads — which is exactly the effect the
+    paper's I/O decoupling (§3.2) exploits.
+    """
+
+    def __init__(self, inner: BackingStore, latency_s: float = 5e-3,
+                 bandwidth_Bps: float = 200e6):
+        self.inner = inner
+        self.latency_s = latency_s
+        self.bandwidth_Bps = bandwidth_Bps
+        self.reset_stats()
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def _delay(self, nbytes: int) -> None:
+        time.sleep(self.latency_s + nbytes / self.bandwidth_Bps)
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        self._delay(buf.nbytes)
+        n = self.inner.read_into(offset, buf)
+        self._count_read(n)
+        return n
+
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        self._delay(buf.nbytes)
+        n = self.inner.write_from(offset, buf)
+        self._count_write(n)
+        return n
+
+    def flush(self) -> None:
+        self.inner.flush()
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+class SyntheticStore(BackingStore):
+    """Procedural contents: ``generator(offset, buf)`` fills reads.
+
+    Lets benchmarks address logical spaces far larger than the container disk
+    (writes go to an overlay dict at page granularity).
+    """
+
+    def __init__(self, size: int, generator: Callable[[int, np.ndarray], None],
+                 overlay_page: int = 1 << 20):
+        self._size = size
+        self._gen = generator
+        self._overlay: dict[int, np.ndarray] = {}
+        self._overlay_page = overlay_page
+        self._lock = threading.Lock()
+        self.reset_stats()
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        mv = buf.view(np.uint8)
+        self._gen(offset, mv)
+        # apply any overlayed (written) ranges
+        p = self._overlay_page
+        first, last = offset // p, (offset + mv.nbytes - 1) // p
+        with self._lock:
+            for pg in range(first, last + 1):
+                od = self._overlay.get(pg)
+                if od is None:
+                    continue
+                lo = max(offset, pg * p)
+                hi = min(offset + mv.nbytes, (pg + 1) * p)
+                mv[lo - offset : hi - offset] = od[lo - pg * p : hi - pg * p]
+        self._count_read(mv.nbytes)
+        return mv.nbytes
+
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        mv = buf.view(np.uint8)
+        p = self._overlay_page
+        with self._lock:
+            pos = 0
+            while pos < mv.nbytes:
+                pg = (offset + pos) // p
+                od = self._overlay.get(pg)
+                if od is None:
+                    od = np.zeros(p, np.uint8)
+                    self._gen(pg * p, od)
+                    self._overlay[pg] = od
+                lo = offset + pos
+                hi = min((pg + 1) * p, offset + mv.nbytes)
+                od[lo - pg * p : hi - pg * p] = mv[pos : pos + (hi - lo)]
+                pos += hi - lo
+        self._count_write(mv.nbytes)
+        return mv.nbytes

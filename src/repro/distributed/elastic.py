@@ -1,0 +1,70 @@
+"""Elastic scaling: restore a checkpoint onto a *different* mesh.
+
+Checkpoints store full logical arrays (ckpt/checkpoint.py), so resuming on a
+grown/shrunk cluster is a placement problem, not a data problem: rebuild the
+NamedShardings for the new mesh from the same logical-axis rules and
+device_put each leaf.  ``plan_remesh`` validates divisibility up front and
+reports which logical axes forced replication — the operator-facing report
+for "can I run this on N chips?" (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..configs.base import ModelConfig
+from ..models.common import logical_axes_tree, shapes_tree
+from ..models.transformer import param_specs
+from .sharding import logical_pspec
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RemeshReport:
+    ok: bool
+    devices: int
+    replicated_leaves: int
+    sharded_leaves: int
+    notes: list
+
+
+def plan_remesh(cfg: ModelConfig, mesh: Mesh) -> RemeshReport:
+    axes = logical_axes_tree(param_specs(cfg))
+    shapes = shapes_tree(param_specs(cfg))
+    notes, nrep, nsh = [], 0, 0
+
+    def visit(ax, shp):
+        nonlocal nrep, nsh
+        spec = logical_pspec(ax, shp, mesh)
+        if all(s is None for s in spec):
+            nrep += 1
+        else:
+            nsh += 1
+
+    jax.tree.map(visit, axes, shapes,
+                 is_leaf=lambda v: isinstance(v, tuple) and all(
+                     a is None or isinstance(a, str) for a in v))
+    if "model" in mesh.axis_names and cfg.d_ff and \
+            cfg.d_ff % mesh.shape["model"] != 0:
+        notes.append(f"d_ff {cfg.d_ff} not divisible by model axis "
+                     f"{mesh.shape['model']} -> FFN replicated")
+    return RemeshReport(ok=True, devices=mesh.size, replicated_leaves=nrep,
+                        sharded_leaves=nsh, notes=notes)
+
+
+def reshard_tree(cfg: ModelConfig, mesh: Mesh, host_tree: PyTree) -> PyTree:
+    """Place host (numpy) params onto a new mesh per the logical rules."""
+    axes = logical_axes_tree(param_specs(cfg))
+
+    def place(ax, arr):
+        sh = NamedSharding(mesh, logical_pspec(ax, arr.shape, mesh))
+        return jax.device_put(arr, sh)
+
+    return jax.tree.map(place, axes, host_tree,
+                        is_leaf=lambda v: isinstance(v, tuple) and all(
+                            a is None or isinstance(a, str) for a in v))

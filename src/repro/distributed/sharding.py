@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules (MaxText-style) for pjit/GSPMD.
+
+Model code annotates activations/params with *logical* axis names; a rules
+table maps logical names to mesh axes.  Outside a mesh context every
+annotation is a no-op, so the same model code runs single-device (tests,
+smoke) and pod-scale (dry-run, production) unchanged.
+
+Key decisions (see DESIGN.md §7):
+
+  batch        -> ("pod", "data")  batch data-parallel across pods
+  heads        -> "model"          Q heads tensor-parallel
+  kv_heads     -> "model" only when num_kv_heads % model_size == 0, else
+                  replicated (GQA KV-dup strategy)
+  ffn / vocab  -> "model"
+  expert       -> "model"          EP when E % model_size == 0 (else TP-MoE)
+  kv_seq       -> "model"          sequence-sharded decode KV (flash-decoding)
+  embed/d_model, ssm state, conv   replicated
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Optional[str]
+
+DEFAULT_RULES: dict[str, Union[None, str, Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,           # overridden to "model" for seq-sharded decode
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",      # applied only if divisible; see below
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_ffn": "model",    # TP-MoE: shard the expert FFN dim instead
+    "moe_cap": ("pod", "data"),   # MoE dispatch capacity dim
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "heads_qk": None,         # mLSTM q/k width (replicated; H=4 < model axis)
+    "heads_v": None,
+    "pages": "model",         # paged-KV page pool sharded over model axis
+    "stage": None,
+}
+
+
+class _ShardingCtx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules = dict(DEFAULT_RULES)
+
+
+_CTX = _ShardingCtx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate a mesh + logical rules for with_logical_constraint."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _resolve_axis(logical: LogicalAxis, mesh: Mesh, dim_size: int):
+    """Map one logical axis to mesh axes, dropping non-divisible mappings."""
+    if logical is None:
+        return None
+    mapping = _CTX.rules.get(logical)
+    if mapping is None:
+        return None
+    axes = (mapping,) if isinstance(mapping, str) else tuple(mapping)
+    # keep only axes present in this mesh
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if dim_size % total != 0:
+        return None  # non-divisible -> replicate (e.g. kv_heads=8 on model=16)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_pspec(logical_axes: Sequence[LogicalAxis], shape: Sequence[int],
+                  mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return P(*([None] * len(logical_axes)))
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set = set()
+    out = []
+    for ax, n in zip(logical_axes, shape):
+        r = _resolve_axis(ax, mesh, n)
+        # one mesh axis may appear at most once in a PartitionSpec
+        flat = (r,) if isinstance(r, str) else (r or ())
+        if r is None or any(a in used for a in flat):
+            out.append(None)
+        else:
+            used.update(flat)
+            out.append(r)
+    return P(*out)
+
+
+def logical_sharding(logical_axes: Sequence[LogicalAxis], shape: Sequence[int],
+                     mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_pspec(logical_axes, shape, mesh))
+
+
+def with_logical_constraint(x: jax.Array, *logical_axes: LogicalAxis) -> jax.Array:
+    """Annotate activation sharding; no-op outside a mesh context."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    sh = logical_sharding(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def param_sharding_tree(logical_tree, shape_tree, mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-axis tuples + shapes to NamedShardings."""
+    mesh = mesh or _CTX.mesh
+    return jax.tree.map(
+        lambda ax, shp: logical_sharding(ax, shp, mesh),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            (a is None or isinstance(a, str)) for a in v
+        ),
+    )

@@ -1,0 +1,132 @@
+"""Flash attention (prefill/train) as a Pallas TPU kernel.
+
+Tiling: grid = (batch, q_heads, Sq/block_q, Sk/block_k); the KV dimension is
+innermost and sequential ("arbitrary"), carrying the online-softmax state
+(m, l, acc) in VMEM scratch across KV steps.  GQA folds into the K/V index
+map (q head h reads kv head h // rep), so KV tiles stay at true KV-head width
+in VMEM.  Causal/window tiles that are fully masked are skipped with pl.when —
+the triangular schedule that DESIGN.md's §Perf measures against the mask-only
+baseline.
+
+Block sizes default to (block_q, block_k) = (256, 512) with head_dim lanes —
+MXU-aligned (multiples of 128) and < 2 MB of VMEM for d=128.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_k: int, num_k_blocks: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+
+    # tile-level skip test (static per (qi, ki) under causality/window)
+    run = True
+    if causal:
+        run = jnp.asarray(k_lo <= q_lo + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, jnp.asarray(k_lo + block_k > q_lo - window + 1))
+
+    @pl.when(run)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)              # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < seq_k
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, q_pos - k_pos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B,H,Sq,D]; k,v: [B,KVH,Sk,D] -> o [B,H,Sq,D].
+
+    Sq/Sk are padded to block multiples internally; H % KVH == 0.
+    """
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    rep = h // kvh
+    scale = 1.0 / math.sqrt(d)
+
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk, 8))
+    sq_p = -(-sq // bq) * bq
+    sk_p = -(-sk // bk) * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    nq, nk = sq_p // bq, sk_p // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, num_k_blocks=nk, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, rep=rep: (b_, h_ // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, rep=rep: (b_, h_ // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq]

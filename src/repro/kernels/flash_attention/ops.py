@@ -1,0 +1,19 @@
+"""jit'd public wrapper: Pallas on TPU, interpret elsewhere, oracle fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention as _pallas
+from .ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, impl="auto", **kw):
+    """impl: 'pallas' | 'interpret' | 'ref' | 'auto' (pallas on TPU)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return _pallas(q, k, v, causal=causal, window=window, **kw)
+    if impl == "interpret":
+        return _pallas(q, k, v, causal=causal, window=window, interpret=True, **kw)
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (dense scores + mask)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: [B,H,Sq,D]; k,v: [B,KVH,Sk,D] -> [B,H,Sq,D]."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= qp - kp < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,76 @@
+"""Bulk page install/evict kernels — the on-device UFFDIO_COPY analogue.
+
+``page_gather``  copies an arbitrary set of physical pool pages into a
+contiguous destination (fault resolution / prefetch batch: UMap fillers).
+``page_scatter`` writes contiguous staging pages back into arbitrary pool
+slots (dirty write-back: UMap evictors), updating the pool in place via
+input/output aliasing — the atomic-install semantics of UFFDIO_COPY (§2.2):
+a page becomes visible only as a whole.
+
+Page indices ride in scalar-prefetch SMEM and drive the BlockSpec index maps,
+so each grid step is a single page-sized DMA — no per-element gather.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(ids_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_gather(pool: jax.Array, page_ids: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """pool: [P, page_elems]; page_ids: [n] int32 -> [n, page_elems]."""
+    p, elems = pool.shape
+    n = page_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, elems), lambda i, ids: (ids[i], 0))],
+        out_specs=pl.BlockSpec((1, elems), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, elems), pool.dtype),
+        interpret=interpret,
+    )(page_ids, pool)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def page_scatter(pool: jax.Array, page_ids: jax.Array, pages: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """Write staging ``pages`` [n, page_elems] into ``pool`` slots ``page_ids``.
+
+    Returns the updated pool (the input buffer is donated/aliased).
+    """
+    p, elems = pool.shape
+    n = page_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, elems), lambda i, ids: (i, 0)),      # staging
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),      # pool alias
+        ],
+        out_specs=pl.BlockSpec((1, elems), lambda i, ids: (ids[i], 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel_scatter,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, elems), pool.dtype),
+        input_output_aliases={2: 0},   # pool (after 1 scalar-prefetch arg) -> out
+        interpret=interpret,
+    )(page_ids, pages, pool)
+
+
+def _copy_kernel_scatter(ids_ref, staging_ref, pool_any_ref, out_ref):
+    out_ref[...] = staging_ref[...]

@@ -1,0 +1,28 @@
+"""jit'd public wrappers for bulk page install/evict."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import page_gather as _gather, page_scatter as _scatter
+from .ref import page_gather_ref, page_scatter_ref
+
+
+def page_gather(pool, page_ids, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return _gather(pool, page_ids)
+    if impl == "interpret":
+        return _gather(pool, page_ids, interpret=True)
+    return page_gather_ref(pool, page_ids)
+
+
+def page_scatter(pool, page_ids, pages, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return _scatter(pool, page_ids, pages)
+    if impl == "interpret":
+        return _scatter(pool, page_ids, pages, interpret=True)
+    return page_scatter_ref(pool, page_ids, pages)

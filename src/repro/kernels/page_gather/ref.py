@@ -1,0 +1,11 @@
+"""Pure-jnp oracles for page gather/scatter."""
+
+import jax.numpy as jnp
+
+
+def page_gather_ref(pool, page_ids):
+    return jnp.take(pool, page_ids, axis=0)
+
+
+def page_scatter_ref(pool, page_ids, pages):
+    return pool.at[page_ids].set(pages)

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import paged_attention as _pallas
+from .ref import paged_attention_ref
+
+
+def paged_attention(q, k_pool, v_pool, page_table, lengths, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return _pallas(q, k_pool, v_pool, page_table, lengths)
+    if impl == "interpret":
+        return _pallas(q, k_pool, v_pool, page_table, lengths, interpret=True)
+    return paged_attention_ref(q, k_pool, v_pool, page_table, lengths)

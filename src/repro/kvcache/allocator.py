@@ -1,0 +1,74 @@
+"""Physical-page allocator for the device KV pool (host-managed free list).
+
+The device pool is the UMap buffer; this allocator is the slot free-list
+(core/buffer.py) specialized for KV pages, plus per-sequence accounting so
+the serving engine can evict whole sequences (uunmap analogue) or individual
+cold pages (watermark analogue).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._owner: Dict[int, int] = {}          # page -> seq_id
+        self._seq_pages: Dict[int, List[int]] = {}  # seq_id -> pages in order
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.used_pages / self.num_pages
+
+    def alloc(self, seq_id: int, n: int = 1) -> List[int]:
+        if len(self._free) < n:
+            raise OutOfPages(
+                f"need {n} pages, {len(self._free)} free of {self.num_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = seq_id
+        self._seq_pages.setdefault(seq_id, []).extend(pages)
+        return pages
+
+    def pages_of(self, seq_id: int) -> List[int]:
+        return list(self._seq_pages.get(seq_id, []))
+
+    def free_seq(self, seq_id: int) -> int:
+        pages = self._seq_pages.pop(seq_id, [])
+        for p in pages:
+            del self._owner[p]
+            self._free.append(p)
+        return len(pages)
+
+    def free_prefix(self, seq_id: int, n: int) -> List[int]:
+        """Release the oldest n pages of a sequence (sliding-window evict)."""
+        pages = self._seq_pages.get(seq_id, [])
+        drop, keep = pages[:n], pages[n:]
+        self._seq_pages[seq_id] = keep
+        for p in drop:
+            del self._owner[p]
+            self._free.append(p)
+        return drop
+
+    def table_for(self, seq_id: int, max_pages: int,
+                  fill: int = 0) -> np.ndarray:
+        """Fixed-width page table row (padded with ``fill``)."""
+        pages = self._seq_pages.get(seq_id, [])
+        row = np.full(max_pages, fill, np.int32)
+        row[: len(pages)] = pages[:max_pages]
+        return row

@@ -1,0 +1,179 @@
+"""Paged KV cache: the device-side UMap region (deliverable: core technique).
+
+Layout (per decoder layer-stack):
+
+  k_pool / v_pool : [L, num_pages, page_size, KVH, D]   the UMap buffer
+  page tables     : host-side, per sequence (allocator.py free list)
+
+``page_size`` (tokens per page) is the paper's §3.6 knob — benchmarks sweep
+it.  The pool is sharded over the *model* axis at pod scale ("pages" logical
+axis), making the page table a distributed mapping: logical page ->
+(shard, slot) — the UMap-at-cluster-scale story from DESIGN.md §7.
+
+The attention read path goes through kernels/paged_attention (block-table
+indirection in-kernel); installs/evictions use kernels/page_gather
+(UFFDIO_COPY analogue).  A contiguous, max-length pre-allocated cache
+(`ContiguousKVCache`) is the mmap baseline this design is compared against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.paged_attention.ops import paged_attention
+from .allocator import OutOfPages, PageAllocator
+
+
+@dataclasses.dataclass
+class PagedKVConfig:
+    num_layers: int
+    num_kv_heads: int
+    head_dim: int
+    page_size: int = 64          # tokens per page (UMAP_PAGESIZE analogue)
+    num_pages: int = 1024        # pool pages per layer (UMAP_BUFSIZE analogue)
+    max_pages_per_seq: int = 128
+    dtype: str = "bfloat16"
+
+    @property
+    def page_bytes(self) -> int:
+        return (self.page_size * self.num_kv_heads * self.head_dim
+                * 2 * jnp.dtype(self.dtype).itemsize)
+
+
+class PagedKVCache:
+    """Host-managed page tables over device-resident pools."""
+
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.num_layers, cfg.num_pages, cfg.page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        self.k_pool = jnp.zeros(shape, dt)
+        self.v_pool = jnp.zeros(shape, dt)
+        self.allocator = PageAllocator(cfg.num_pages)
+        self.seq_len: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- sequences
+
+    def add_sequence(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+        """Install a prefilled sequence.  k/v: [L, S, KVH, D]."""
+        S = k.shape[1]
+        ps = self.cfg.page_size
+        n_pages = -(-S // ps)
+        pages = self.allocator.alloc(seq_id, n_pages)
+        pad = n_pages * ps - S
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = k.reshape(k.shape[0], n_pages, ps, *k.shape[2:])
+        vp = v.reshape(v.shape[0], n_pages, ps, *v.shape[2:])
+        idx = jnp.asarray(pages, jnp.int32)
+        self.k_pool = self.k_pool.at[:, idx].set(kp.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[:, idx].set(vp.astype(self.v_pool.dtype))
+        self.seq_len[seq_id] = S
+
+    def append_token(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+        """Append one token.  k/v: [L, KVH, D].  Allocates a page on boundary."""
+        pos = self.seq_len[seq_id]
+        ps = self.cfg.page_size
+        if pos % ps == 0:
+            self.allocator.alloc(seq_id, 1)
+        page = self.allocator.pages_of(seq_id)[pos // ps]
+        slot = pos % ps
+        self.k_pool = self.k_pool.at[:, page, slot].set(k.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[:, page, slot].set(v.astype(self.v_pool.dtype))
+        self.seq_len[seq_id] = pos + 1
+
+    def release(self, seq_id: int) -> int:
+        self.seq_len.pop(seq_id, None)
+        return self.allocator.free_seq(seq_id)
+
+    def evict_window_prefix(self, seq_id: int, window: int) -> List[int]:
+        """Sliding-window policy: free pages fully behind the window."""
+        ps = self.cfg.page_size
+        keep_from = max(0, self.seq_len.get(seq_id, 0) - window)
+        evictable = keep_from // ps
+        already = len(self.allocator.pages_of(seq_id)) - (
+            -(-self.seq_len.get(seq_id, 0) // ps))
+        del already
+        return self.allocator.free_prefix(seq_id, evictable) if evictable else []
+
+    # ------------------------------------------------------------- attention
+
+    def batch_tables(self, seq_ids: List[int]) -> Tuple[jax.Array, jax.Array]:
+        rows = [self.allocator.table_for(s, self.cfg.max_pages_per_seq)
+                for s in seq_ids]
+        lengths = [self.seq_len.get(s, 0) for s in seq_ids]
+        return (jnp.asarray(np.stack(rows), jnp.int32),
+                jnp.asarray(lengths, jnp.int32))
+
+    def attend(self, layer: int, q: jax.Array, seq_ids: List[int],
+               impl: str = "auto") -> jax.Array:
+        """Decode attention for one layer.  q: [B, H, D] (B == len(seq_ids))."""
+        table, lengths = self.batch_tables(seq_ids)
+        return paged_attention(q, self.k_pool[layer], self.v_pool[layer],
+                               table, lengths, impl=impl)
+
+    # ------------------------------------------------------------- telemetry
+
+    def stats(self) -> dict:
+        return {
+            "pages_used": self.allocator.used_pages,
+            "pages_free": self.allocator.free_pages,
+            "occupancy": self.allocator.occupancy(),
+            "page_bytes": self.cfg.page_bytes,
+            "sequences": len(self.seq_len),
+        }
+
+
+class ContiguousKVCache:
+    """The mmap baseline: per-sequence max-length pre-allocation.
+
+    Same interface as PagedKVCache for the benchmark comparison; memory is
+    reserved up front per slot (internal fragmentation = max_len - actual),
+    exactly the over-allocation pattern paged attention removes.
+    """
+
+    def __init__(self, num_layers: int, num_kv_heads: int, head_dim: int,
+                 max_seqs: int, max_len: int, dtype: str = "bfloat16"):
+        dt = jnp.dtype(dtype)
+        self.k = jnp.zeros((num_layers, max_seqs, max_len, num_kv_heads, head_dim), dt)
+        self.v = jnp.zeros_like(self.k)
+        self.max_len = max_len
+        self.slots: Dict[int, int] = {}
+        self._free = list(range(max_seqs - 1, -1, -1))
+        self.seq_len: Dict[int, int] = {}
+
+    def add_sequence(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+        if not self._free:
+            raise OutOfPages("no contiguous slots left")
+        slot = self._free.pop()
+        self.slots[seq_id] = slot
+        S = k.shape[1]
+        self.k = self.k.at[:, slot, :S].set(k.astype(self.k.dtype))
+        self.v = self.v.at[:, slot, :S].set(v.astype(self.v.dtype))
+        self.seq_len[seq_id] = S
+
+    def append_token(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+        slot = self.slots[seq_id]
+        pos = self.seq_len[seq_id]
+        self.k = self.k.at[:, slot, pos].set(k.astype(self.k.dtype))
+        self.v = self.v.at[:, slot, pos].set(v.astype(self.v.dtype))
+        self.seq_len[seq_id] = pos + 1
+
+    def release(self, seq_id: int) -> int:
+        slot = self.slots.pop(seq_id)
+        self._free.append(slot)
+        self.seq_len.pop(seq_id, None)
+        return self.max_len
+
+    def reserved_tokens(self) -> int:
+        return len(self.slots) * self.max_len
+
+    def used_tokens(self) -> int:
+        return sum(self.seq_len.values())

@@ -1,0 +1,56 @@
+"""Production meshes (DESIGN.md §7) + sharding-rule overlays.
+
+``make_production_mesh`` is a function, not a module constant, so importing
+this module never touches jax device state (required by the dry-run contract:
+device count is locked at first jax init).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ..distributed.sharding import DEFAULT_RULES
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = (data, model) single pod; 2x16x16 = (pod, data, model) for two."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1D 'data' mesh (tests/smoke)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def rules_for(kind: str, cfg=None) -> dict:
+    """Sharding-rule overlay per entry-point kind (and parallelism policy).
+
+    decode: the KV cache shards its *sequence* dim over the model axis
+    (flash-decoding style); train/prefill keep sequence unsharded and put the
+    model axis on heads/ffn/vocab.
+
+    cfg.parallelism == "dp" (§Perf H3): batch shards over BOTH axes and all
+    tensor-parallel mappings drop — pure data parallel + ZeRO, for models too
+    small to amortize TP collectives (smollm-135m on 256 chips).
+    """
+    rules = dict(DEFAULT_RULES)
+    if kind == "decode":
+        rules["kv_seq"] = "model"
+    if cfg is not None and getattr(cfg, "parallelism", "tp") == "dp":
+        rules["batch"] = ("data", "model")
+        for ax in ("heads", "kv_heads", "ffn", "vocab", "expert",
+                   "expert_ffn", "ssm_inner", "kv_seq"):
+            rules[ax] = None
+        rules["moe_cap"] = ("data", "model")
+    return rules
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

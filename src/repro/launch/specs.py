@@ -1,0 +1,263 @@
+"""input_specs + sharding-spec assembly for every (arch × shape) cell.
+
+Everything here is ShapeDtypeStruct-only (no allocation): the same pattern
+the dry-run contract requires.  ``build_cell`` returns the jitted-but-not-yet-
+lowered entry point plus its abstract inputs and shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.sharding import logical_pspec
+from ..models import transformer as T
+from ..models.common import logical_axes_tree, shapes_tree
+from ..models.transformer import param_specs
+from ..train.optimizer import AdamWConfig, AdamWState
+from ..train.train_step import TrainConfig, train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ------------------------------------------------------------------- params
+
+
+_is_shape = lambda v: isinstance(v, tuple) and all(isinstance(d, int) for d in v)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda shp: SDS(shp, dtype),
+                        shapes_tree(param_specs(cfg)), is_leaf=_is_shape)
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    axes = logical_axes_tree(param_specs(cfg))
+    shapes = shapes_tree(param_specs(cfg))
+    return jax.tree.map(
+        lambda ax, shp: logical_pspec(ax, shp, mesh),
+        axes, shapes,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            a is None or isinstance(a, str) for a in v))
+
+
+def zero1_pspec(base: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Augment a param pspec with data(-and-pod) sharding for optimizer state.
+
+    The first unsharded dim divisible by the data axis (or pod*data) takes it
+    — ZeRO-1: m/v live sharded, params stay as-is (DESIGN.md §4).
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = [mesh.shape[a] for a in data_axes]
+    total = 1
+    for s_ in sizes:
+        total *= s_
+    spec = list(base) + [None] * (len(shape) - len(base))
+    for i, (ax, dim) in enumerate(zip(spec, shape)):
+        if ax is None and dim % total == 0 and total > 1:
+            spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*spec)
+    # fall back to data-only
+    if len(data_axes) > 1:
+        d = mesh.shape["data"]
+        for i, (ax, dim) in enumerate(zip(spec, shape)):
+            if ax is None and dim % d == 0 and d > 1:
+                spec[i] = "data"
+                return P(*spec)
+    return P(*spec)
+
+
+def opt_pspecs(cfg: ModelConfig, mesh: Mesh) -> AdamWState:
+    base = param_pspecs(cfg, mesh)
+    shapes = shapes_tree(param_specs(cfg))
+    mv = jax.tree.map(lambda ps, shp: zero1_pspec(ps, shp, mesh), base, shapes,
+                      is_leaf=lambda v: isinstance(v, P))
+    return AdamWState(step=P(), m=mv, v=mv)
+
+
+def abstract_opt_state(cfg: ModelConfig) -> AdamWState:
+    shapes = shapes_tree(param_specs(cfg))
+    zeros = jax.tree.map(lambda shp: SDS(shp, jnp.float32), shapes,
+                         is_leaf=_is_shape)
+    return AdamWState(step=SDS((), jnp.int32), m=zeros,
+                      v=jax.tree.map(lambda x: x, zeros))
+
+
+# -------------------------------------------------------------------- batch
+
+
+def batch_pspec(mesh: Mesh, batch_size: Optional[int] = None) -> P:
+    """Batch partitioning over (pod, data), dropped when not divisible
+    (long_500k has global_batch=1: batch stays replicated)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch_size is not None:
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if batch_size % total != 0:
+            axes = tuple(a for a in axes
+                         if batch_size % mesh.shape[a] == 0 and a == "data")
+    if not axes:
+        return P(None)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for one cell (ShapeDtypeStruct stand-ins)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "embeds":
+            batch["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+            if cfg.mrope_sections is not None:
+                batch["positions"] = SDS((B, 3, S), jnp.int32)
+        else:
+            batch["tokens"] = SDS((B, S), jnp.int32)
+        if cfg.is_encdec:
+            # stub speech frontend: ~same-length frame embeddings
+            batch["src_embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            batch["labels"] = SDS((B, S), jnp.int32)
+    else:  # decode
+        batch["tokens"] = SDS((B,), jnp.int32)
+        batch["cur_pos"] = SDS((B,), jnp.int32)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    bp = batch_pspec(mesh, shape.global_batch)
+    b_axes = bp[0]
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        out[k] = P(*([b_axes] + [None] * (len(v.shape) - 1)))
+    return out
+
+
+# -------------------------------------------------------------------- cache
+
+
+def _cache_logical_axes(cfg: ModelConfig, leaf_path_shape) -> tuple:
+    raise NotImplementedError  # replaced by explicit builder below
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig) -> list:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    f = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len, dtype,
+                             memory_len=shape.seq_len if cfg.is_encdec else None))
+    return f
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> list:
+    """PartitionSpecs mirroring init_cache's structure."""
+    abstract = abstract_cache(cfg, shape)
+    bp = batch_pspec(mesh, shape.global_batch)
+    b_ax = bp[0]
+
+    def spec_for(path: str, x) -> P:
+        nd = len(x.shape)
+        if path in ("k", "v"):          # [L, B, S, KVH, D]
+            return P(None, b_ax, *logical_pspec(
+                ("kv_seq", "kv_heads"), x.shape[2:4], mesh), None)
+        if path in ("xk", "xv"):        # [L, B, Sm, KVH, D]
+            return P(None, b_ax, None,
+                     logical_pspec(("kv_heads",), (x.shape[3],), mesh)[0], None)
+        if path == "pos":               # [L, B, S]
+            return P(None, b_ax, logical_pspec(("kv_seq",), (x.shape[2],), mesh)[0])
+        if path == "ssm":               # [L, B, d_inner, N]
+            return P(None, b_ax, logical_pspec(("ssm_inner",), (x.shape[2],), mesh)[0], None)
+        if path == "conv":              # [L, B, K-1, d_inner or d_model]
+            return P(None, b_ax, None,
+                     logical_pspec(("ssm_inner",), (x.shape[3],), mesh)[0])
+        # mlstm/slstm state tuples and anything else: batch-shard dim 1 only
+        return P(*([None, b_ax] + [None] * (nd - 2)))
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (spec_for(k, v) if isinstance(v, SDS) else walk_v(k, v))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = type(tree)
+            return t(walk(v) for v in tree)
+        raise TypeError(type(tree))
+
+    def walk_v(key, v):
+        if isinstance(v, (tuple, list)):
+            return type(v)(spec_for(key, x) if isinstance(x, SDS) else walk(x)
+                           for x in v)
+        return walk(v)
+
+    return walk(abstract)
+
+
+# ---------------------------------------------------------------- entry fns
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               tcfg: Optional[TrainConfig] = None):
+    """Returns (jitted_fn, abstract_args tuple) ready to .lower(*args)."""
+    pspec_params = param_pspecs(cfg, mesh)
+    sh = lambda ps: jax.tree.map(
+        lambda p: NamedSharding(mesh, p), ps,
+        is_leaf=lambda v: isinstance(v, P))
+    a_params = abstract_params(cfg)
+    b_specs = batch_pspecs(cfg, shape, mesh)
+    a_batch = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        a_opt = abstract_opt_state(cfg)
+        o_specs = opt_pspecs(cfg, mesh)
+
+        def fn(params, opt_state, batch):
+            return train_step(cfg, tcfg, params, opt_state, batch)
+
+        jitted = jax.jit(
+            fn,
+            in_shardings=(sh(pspec_params), sh(o_specs), sh(b_specs)),
+            out_shardings=(sh(pspec_params), sh(o_specs), None),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (a_params, a_opt, a_batch)
+
+    if shape.kind == "prefill":
+        c_specs = cache_pspecs(cfg, shape, mesh)
+
+        def fn(params, batch):
+            cache = T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 jnp.dtype(cfg.compute_dtype),
+                                 memory_len=shape.seq_len if cfg.is_encdec else None)
+            last_hidden, cache = T.prefill(cfg, params, batch, cache)
+            logits = T.lm_logits(cfg, params, last_hidden)
+            return logits, cache
+
+        jitted = jax.jit(
+            fn,
+            in_shardings=(sh(pspec_params), sh(b_specs)),
+            out_shardings=(NamedSharding(mesh, batch_pspec(mesh, shape.global_batch)),
+                           sh(c_specs)),
+        )
+        return jitted, (a_params, a_batch)
+
+    # decode
+    c_specs = cache_pspecs(cfg, shape, mesh)
+    a_cache = abstract_cache(cfg, shape)
+
+    def fn(params, cache, tokens, cur_pos):
+        return T.decode_step(cfg, params, cache, tokens, cur_pos)
+
+    bsh = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch))
+    jitted = jax.jit(
+        fn,
+        in_shardings=(sh(pspec_params), sh(c_specs), bsh, bsh),
+        out_shardings=(bsh, sh(c_specs)),
+        donate_argnums=(1,),
+    )
+    return jitted, (a_params, a_cache, a_batch["tokens"], a_batch["cur_pos"])

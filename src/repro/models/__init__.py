@@ -1,0 +1,20 @@
+# Model definitions for the 10 assigned architectures.
+#
+#   common       dtype policy, ParamSpec trees, initializers
+#   layers       norms, RoPE/M-RoPE, GQA attention (dense/chunked), MLPs
+#   ssm          Mamba-1 with chunked selective scan (TPU-native)
+#   xlstm        mLSTM (chunkwise-parallel) + sLSTM blocks
+#   moe          top-k router, sort-based capacity dispatch (EP/TP)
+#   blocks       per-segment-kind block params/apply + cache geometry
+#   transformer  LM / enc-dec assembly, scan-over-layers, prefill/decode
+
+from .transformer import (  # noqa: F401
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    lm_logits,
+    param_logical_axes,
+    param_specs,
+    prefill,
+)

@@ -1,0 +1,130 @@
+"""Shared model utilities: dtype policy, initializers, param trees."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    # reductions (softmax denominators, norms, losses) always run in fp32
+
+    def cast_compute(self, x):
+        return jax.tree.map(lambda a: a.astype(self.compute_dtype), x)
+
+
+BF16 = DTypePolicy()
+F32 = DTypePolicy(compute_dtype=jnp.float32)
+
+
+def round_up(x: int, multiple: int) -> int:
+    return -(-x // multiple) * multiple
+
+
+# ----------------------------------------------------------------- initializers
+
+
+def normal_init(key, shape, dtype, stddev):
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype, fan_in: Optional[int] = None):
+    """Truncated-normal-ish scaled init (1/sqrt(fan_in))."""
+    fi = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    return normal_init(key, shape, dtype, 1.0 / math.sqrt(max(1, fi)))
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+# ----------------------------------------------------------------- param spec
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """Shape + logical axes + initializer for one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: Callable = fan_in_init
+
+    def make(self, key, dtype):
+        return self.init(key, self.shape, dtype)
+
+
+def init_param_tree(spec_tree: PyTree, rng: jax.Array, dtype) -> PyTree:
+    """Initialize a pytree of ParamSpec with split keys (deterministic order)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(rng, len(leaves))
+    vals = [spec.make(k, dtype) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_axes_tree(spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: s.logical_axes,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def shapes_tree(spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: s.shape, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def stack_specs(spec_tree: PyTree, n: int, stack_axis_name: Optional[str] = "layers") -> PyTree:
+    """Prepend a stacking dim of size n (for scan-over-layers param stacks)."""
+
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            shape=(n,) + s.shape,
+            logical_axes=(None,) + s.logical_axes,
+            init=_vmapped_init(s.init, n),
+        )
+
+    return jax.tree.map(_stack, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _vmapped_init(init: Callable, n: int) -> Callable:
+    def f(key, shape, dtype):
+        keys = jax.random.split(key, n)
+        per = shape[1:]
+        return jnp.stack([init(k, per, dtype) for k in keys])
+
+    return f
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def tree_bytes(params: PyTree) -> int:
+    return sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+
+
+def assert_finite(tree: PyTree, name: str = "tree") -> None:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if not np.isfinite(arr).all():
+            raise AssertionError(f"non-finite values in {name}{jax.tree_util.keystr(path)}")

@@ -1,0 +1,213 @@
+"""Mamba-1 selective SSM with a chunked (TPU-native) selective scan.
+
+The reference algorithm is a sequential per-timestep recurrence
+
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + dt_t ⊙ B_t ⊙ x_t        (h: [d_inner, N])
+    y_t = ⟨h_t, C_t⟩_N + D ⊙ x_t
+
+GPU Mamba fuses this into a warp-level scan kernel.  The TPU-native adaptation
+(DESIGN.md §2: rethink blocking for VMEM/MXU rather than port the CUDA scan):
+process the sequence in chunks of ``chunk_size``; *within* a chunk use an
+associative scan (log-depth, fully vectorized); *across* chunks carry only the
+[B, d_inner, N] boundary state.  Peak memory is O(B · chunk · d_inner · N)
+instead of O(B · S · d_inner · N), and every op is a large elementwise/matmul
+op the MXU/VPU likes.
+
+``selective_scan_ref`` is the obvious sequential oracle used by unit tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, fan_in_init, normal_init, ones_init, zeros_init
+
+
+# ------------------------------------------------------------------ the scan
+
+
+def selective_scan_ref(x, dt, B, C, A, D, h0=None):
+    """Sequential oracle.  x,dt: [b,s,d]; B,C: [b,s,n]; A: [d,n]; D: [d]."""
+    b, s, d = x.shape
+    n = B.shape[-1]
+    h = jnp.zeros((b, d, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)              # [b,d,n]
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D * x_t
+        return h, y
+
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h
+
+
+def selective_scan(x, dt, B, C, A, D, h0=None, chunk_size: int = 128):
+    """Chunked selective scan; matches selective_scan_ref.
+
+    Returns (y [b,s,d], h_last [b,d,n]).
+    """
+    b, s, d = x.shape
+    n = B.shape[-1]
+    cs = min(chunk_size, s)
+    if s % cs != 0:  # pad tail with dt=0 (identity transition, no input)
+        pad = cs - s % cs
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_pad = x.shape[1]
+    nc = s_pad // cs
+
+    h_init = jnp.zeros((b, d, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def chunk_step(h_in, inp):
+        x_c, dt_c, B_c, C_c = inp                       # [b,cs,*]
+        x_c = x_c.astype(jnp.float32)
+        dt_c = dt_c.astype(jnp.float32)
+        B_c = B_c.astype(jnp.float32)
+        C_c = C_c.astype(jnp.float32)
+        logA = dt_c[..., None] * A                      # [b,cs,d,n] (<= 0)
+        dBx = dt_c[..., None] * B_c[:, :, None, :] * x_c[..., None]
+
+        # first-order-recurrence combine: (a1,b1) ∘ (a2,b2) = (a1a2, a2b1+b2)
+        def comb(l, r):
+            a1, b1 = l
+            a2, b2 = r
+            return a1 * a2, a2 * b1 + b2
+
+        cumA, cumB = jax.lax.associative_scan(
+            comb, (jnp.exp(logA), dBx), axis=1)
+        h_t = cumA * h_in[:, None] + cumB               # [b,cs,d,n]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_t, C_c)
+        return h_t[:, -1], y_c
+
+    xs = (x.reshape(b, nc, cs, d).swapaxes(0, 1),
+          dt.reshape(b, nc, cs, d).swapaxes(0, 1),
+          B.reshape(b, nc, cs, n).swapaxes(0, 1),
+          C.reshape(b, nc, cs, n).swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(chunk_step, h_init, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, d)[:, :s]
+    return (y + D * x[:, :s].astype(jnp.float32)).astype(x.dtype), h_last
+
+
+def selective_scan_decode(x, dt, B, C, A, D, h):
+    """One-token update.  x,dt: [b,d]; B,C: [b,n]; h: [b,d,n]."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A)
+    h = dA * h + dtf[..., None] * B.astype(jnp.float32)[:, None, :] * xf[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32)) + D * xf
+    return y.astype(x.dtype), h
+
+
+# ----------------------------------------------------------------- conv1d
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x: [b,s,d]; w: [K,d]; state: [b,K-1,d].
+
+    Returns (y [b,s,d], new_state [b,K-1,d]).
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)   # [b, s+K-1, d]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):  # K is 4 — unrolled shifts beat conv_general on TPU
+        y = y + xp[:, k : k + x.shape[1]].astype(jnp.float32) * w[k].astype(jnp.float32)
+    y = y + bias.astype(jnp.float32)
+    new_state = xp[:, x.shape[1] :]
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------- mamba block
+
+
+def mamba_param_specs(d_model: int, d_inner: int, ssm_state: int,
+                      d_conv: int = 4, dt_rank: Optional[int] = None) -> dict:
+    dt_rank = dt_rank or max(1, d_model // 16)
+
+    def a_log_init(key, shape, dtype):
+        del key
+        # S4D-real init: A = -[1..N] per channel
+        return jnp.log(jnp.broadcast_to(
+            jnp.arange(1, shape[1] + 1, dtype=jnp.float32), shape)).astype(dtype)
+
+    def dt_bias_init(key, shape, dtype):
+        # softplus^-1 of dt ~ U[1e-3, 1e-1]
+        u = jax.random.uniform(key, shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+
+    return {
+        "in_proj": ParamSpec((d_model, 2 * d_inner), ("embed", "ssm_inner"), fan_in_init),
+        "conv_w": ParamSpec((d_conv, d_inner), ("conv", "ssm_inner"),
+                            lambda k, s, d: normal_init(k, s, d, 0.1)),
+        "conv_b": ParamSpec((d_inner,), ("ssm_inner",), zeros_init),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * ssm_state), ("ssm_inner", None), fan_in_init),
+        "dt_proj": ParamSpec((dt_rank, d_inner), (None, "ssm_inner"),
+                             lambda k, s, d: normal_init(k, s, d, dt_rank**-0.5)),
+        "dt_bias": ParamSpec((d_inner,), ("ssm_inner",), dt_bias_init),
+        "A_log": ParamSpec((d_inner, ssm_state), ("ssm_inner", "ssm_state"), a_log_init),
+        "D": ParamSpec((d_inner,), ("ssm_inner",), ones_init),
+        "out_proj": ParamSpec((d_inner, d_model), ("ssm_inner", "embed"), fan_in_init),
+    }
+
+
+def mamba_forward(p: dict, x: jax.Array, ssm_state, conv_state,
+                  dt_rank: int, chunk_size: int = 128):
+    """Full-sequence mamba mixer.  x: [b,s,d_model].
+
+    Returns (y [b,s,d_model], (ssm_state, conv_state)).
+    """
+    d_inner = p["D"].shape[0]
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = causal_conv1d(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+    dbc = x_c @ p["x_proj"]
+    dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + p["A_log"].shape[1]], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssm_state = selective_scan(x_c, dt, B, C, A,
+                                  p["D"].astype(jnp.float32), ssm_state,
+                                  chunk_size=chunk_size)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (ssm_state, conv_state)
+
+
+def mamba_decode(p: dict, x: jax.Array, ssm_state, conv_state, dt_rank: int):
+    """One-token mamba step.  x: [b,1,d_model]."""
+    xz = x[:, 0] @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # conv over (state ++ x): one output step
+    K = p["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x_in[:, None]], axis=1)  # [b,K,d]
+    x_c = jnp.einsum("bkd,kd->bd", xp.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    x_c = jax.nn.silu(x_c).astype(x.dtype)
+    conv_state = xp[:, 1:]
+    dbc = x_c @ p["x_proj"]
+    dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + p["A_log"].shape[1]], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssm_state = selective_scan_decode(x_c, dt, B, C, A,
+                                         p["D"].astype(jnp.float32), ssm_state)
+    y = y * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None], (ssm_state, conv_state)
+
+
+def mamba_state_init(batch: int, d_inner: int, ssm_state: int, d_conv: int,
+                     dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    return (jnp.zeros((batch, d_inner, ssm_state), jnp.float32),
+            jnp.zeros((batch, d_conv - 1, d_inner), dtype))

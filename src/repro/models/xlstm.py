@@ -1,0 +1,322 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM + sLSTM.
+
+mLSTM — matrix-memory LSTM with exponential gating:
+
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ          (C: [d_v, d_k] per head)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_tᵀ q_t|, 1)
+
+with log-space stabilizer m_t = max(log f_t + m_{t-1}, log i_t).  The
+recurrence has *scalar per-head* decay, so it admits a chunkwise-parallel
+formulation (the TPU-native adaptation — intra-chunk matmuls on the MXU,
+inter-chunk [d_v, d_k] state carry):
+
+    intra-chunk:  scores_tj = (q_t·k_j) · exp(b_t − b_j + logi_j − m_t), j ≤ t
+    inter-chunk:  contribution q_t·C_in · exp(b_t + m_in − m_t)
+
+where b_t = Σ_{i≤t} log f_i within the chunk.  ``mlstm_ref`` is the
+sequential oracle; tests assert chunked == sequential.
+
+sLSTM — scalar-memory LSTM with a true (non-linear) hidden-to-gate
+recurrence; it cannot be parallelized over time and runs as a lax.scan.
+xLSTM-1.3b places sLSTM in 1 of every 8 blocks (paper's 7:1 mLSTM:sLSTM
+ratio); see configs/xlstm_1p3b.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, fan_in_init, normal_init, ones_init, zeros_init
+from .layers import rms_norm
+from .ssm import causal_conv1d
+
+LOG_EPS = -30.0
+
+
+# ---------------------------------------------------------------- mLSTM core
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate, state=None):
+    """Sequential oracle.  q,k: [b,s,h,dk]; v: [b,s,h,dv]; gates: [b,s,h].
+
+    Returns (y [b,s,h,dv], state).  state = (C [b,h,dv,dk], n [b,h,dk],
+    m [b,h]).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    if state is None:
+        C = jnp.zeros((b, h, dv, dk), jnp.float32)
+        n = jnp.zeros((b, h, dk), jnp.float32)
+        m = jnp.full((b, h), LOG_EPS, jnp.float32)
+    else:
+        C, n, m = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp  # [b,h,*]
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        fs = jnp.exp(logf + m - m_new)          # stabilized forget
+        istab = jnp.exp(i_t - m_new)            # stabilized input
+        C = fs[..., None, None] * C + istab[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :])
+        n = fs[..., None] * n + istab[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t) * scale
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)) * scale
+        y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), y
+
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          i_gate.transpose(1, 0, 2).astype(jnp.float32),
+          f_gate.transpose(1, 0, 2).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, (C, n, m), xs)
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype), state
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, state=None, chunk_size: int = 64):
+    """Chunkwise-parallel mLSTM; matches mlstm_ref.
+
+    Memory: O(b · chunk² · h) score blocks + one [b,h,dv,dk] carry.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    cs = min(chunk_size, s)
+    orig_s = s
+    if s % cs:
+        pad = cs - s % cs
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, i_gate = zf(q), zf(k), zf(v), zf(i_gate)
+        # padded steps: f̃ = +40 (forget→keep state), ĩ = -inf (no input)
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad), (0, 0)), constant_values=40.0)
+        i_gate = i_gate.at[:, orig_s:].set(-1e30) if pad else i_gate
+        s = q.shape[1]
+    nc = s // cs
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dv, dk), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), LOG_EPS, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        q_c, k_c, v_c, i_c, f_c = inp            # [b,cs,h,*] / [b,cs,h]
+        q_c = q_c.astype(jnp.float32)
+        k_c = k_c.astype(jnp.float32)
+        v_c = v_c.astype(jnp.float32)
+        i_c = i_c.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(f_c.astype(jnp.float32))  # [b,cs,h]
+        bsum = jnp.cumsum(logf, axis=1)                     # b_t
+        btot = bsum[:, -1]                                  # [b,h]
+
+        # log-weights of each j's (k v) into the *end-of-chunk* state
+        g = i_c + btot[:, None] - bsum                      # [b,cs,h]
+        m_state = jnp.maximum(btot + m, jnp.max(g, axis=1)) # [b,h]
+        # intra-chunk pairwise log decay:  D_tj = b_t − b_j + i_j  (j ≤ t)
+        dmat = bsum[:, :, None] - bsum[:, None, :] + i_c[:, None, :]  # [b,t,j,h]
+        tri = jnp.tril(jnp.ones((cs, cs), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        # per-row stabilizer: include inter-chunk term b_t + m
+        inter = bsum + m[:, None]                           # [b,t,h]
+        m_row = jnp.maximum(jnp.max(dmat, axis=2), inter)   # [b,t,h]
+
+        sc = jnp.einsum("bthd,bjhd->btjh", q_c, k_c) * scale
+        w = sc * jnp.exp(dmat - m_row[:, :, None])
+        y_intra = jnp.einsum("btjh,bjhv->bthv", w, v_c)
+        l_intra = jnp.einsum("btjh,bjhd->bthd", jnp.exp(dmat - m_row[:, :, None]), k_c)
+
+        dec = jnp.exp(inter - m_row)                        # [b,t,h]
+        y_inter = jnp.einsum("bthd,bhvd->bthv", q_c, C) * scale * dec[..., None]
+        l_inter = n[:, None] * dec[..., None]
+        num = y_intra + y_inter           # both carry exactly one `scale`
+        lvec = l_intra + l_inter          # raw normalizer vector [b,t,h,dk]
+        den = jnp.abs(jnp.einsum("bthd,bthd->bth", lvec, q_c)) * scale
+        y = num / jnp.maximum(den, jnp.exp(-m_row))[..., None]
+
+        # state update to end of chunk
+        wstate = jnp.exp(g - m_state[:, None])              # [b,cs,h]
+        C_new = (jnp.exp(btot + m - m_state)[:, :, None, None] * C
+                 + jnp.einsum("bjh,bjhv,bjhd->bhvd", wstate, v_c, k_c))
+        n_new = (jnp.exp(btot + m - m_state)[..., None] * n
+                 + jnp.einsum("bjh,bjhd->bhd", wstate, k_c))
+        return (C_new, n_new, m_state), y
+
+    # NOTE on scaling: the reference applies 1/sqrt(dk) once to the numerator
+    # (via q·k) and once to the normalizer product.  Above, y_intra/y_inter
+    # carry `scale` inside their q-einsums and the normalizer applies it at
+    # the q·lvec product — exactly one factor each, matching the reference.
+
+    xs = tuple(a.reshape(b, nc, cs, *a.shape[2:]).swapaxes(0, 1)
+               for a in (q, k, v, i_gate, f_gate))
+    state, ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dv)[:, :orig_s]
+    return y.astype(q.dtype), state
+
+
+def mlstm_decode(q, k, v, i_gate, f_gate, state):
+    """One-token mLSTM step.  q,k,v: [b,1,h,d*]; gates: [b,1,h]."""
+    y, state = mlstm_ref(q, k, v, i_gate, f_gate, state)
+    return y, state
+
+
+# ---------------------------------------------------------------- sLSTM core
+
+
+def slstm_scan(x_z, x_i, x_f, x_o, r_z, r_i, r_f, r_o, state=None):
+    """sLSTM over a sequence.  x_*: [b,s,h,d]; r_*: [h,d,d] block-diag
+    recurrent weights.  Returns (h_seq [b,s,h,d], state).
+
+    state = (c, n, m, h) each [b,h,d].
+    """
+    b, s, h, d = x_z.shape
+    if state is None:
+        c = jnp.zeros((b, h, d), jnp.float32)
+        n = jnp.zeros((b, h, d), jnp.float32)
+        m = jnp.full((b, h, d), LOG_EPS, jnp.float32)
+        hid = jnp.zeros((b, h, d), jnp.float32)
+    else:
+        c, n, m, hid = state
+
+    def step(carry, inp):
+        c, n, m, hid = carry
+        xz, xi, xf, xo = inp
+        rz = jnp.einsum("bhd,hde->bhe", hid, r_z)
+        ri = jnp.einsum("bhd,hde->bhe", hid, r_i)
+        rf = jnp.einsum("bhd,hde->bhe", hid, r_f)
+        ro = jnp.einsum("bhd,hde->bhe", hid, r_o)
+        z = jnp.tanh(xz + rz)
+        o = jax.nn.sigmoid(xo + ro)
+        logf = jax.nn.log_sigmoid(xf + rf)
+        itil = xi + ri
+        m_new = jnp.maximum(logf + m, itil)
+        fs = jnp.exp(logf + m - m_new)
+        istab = jnp.exp(itil - m_new)
+        c = fs * c + istab * z
+        n = fs * n + istab
+        hid = o * (c / jnp.maximum(n, 1e-6))
+        return (c, n, m_new, hid), hid
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (x_z, x_i, x_f, x_o))
+    state, ys = jax.lax.scan(step, (c, n, m, hid), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x_z.dtype), state
+
+
+# ------------------------------------------------------------- block params
+
+
+def mlstm_block_specs(d_model: int, num_heads: int, proj_factor: float = 2.0,
+                      qk_factor: float = 0.5, d_conv: int = 4) -> dict:
+    d_inner = int(proj_factor * d_model)
+    dk = int(qk_factor * d_inner)
+    return {
+        "norm": ParamSpec((d_model,), ("embed",), ones_init),
+        "up_proj": ParamSpec((d_model, 2 * d_inner), ("embed", "ssm_inner"), fan_in_init),
+        "conv_w": ParamSpec((d_conv, d_inner), ("conv", "ssm_inner"),
+                            lambda k, s, d: normal_init(k, s, d, 0.1)),
+        "conv_b": ParamSpec((d_inner,), ("ssm_inner",), zeros_init),
+        "wq": ParamSpec((d_inner, dk), ("ssm_inner", "heads_qk"), fan_in_init),
+        "wk": ParamSpec((d_inner, dk), ("ssm_inner", "heads_qk"), fan_in_init),
+        "wv": ParamSpec((d_inner, d_inner), ("ssm_inner", "heads_v"), fan_in_init),
+        "wi": ParamSpec((d_inner, num_heads), ("ssm_inner", None),
+                        lambda k, s, d: normal_init(k, s, d, 0.02)),
+        "wf": ParamSpec((d_inner, num_heads), ("ssm_inner", None),
+                        lambda k, s, d: normal_init(k, s, d, 0.02)),
+        "bf": ParamSpec((num_heads,), (None,),
+                        lambda k, s, d: (3.0 + jnp.arange(s[0], dtype=jnp.float32)).astype(d)),
+        "bi": ParamSpec((num_heads,), (None,), zeros_init),
+        "out_norm": ParamSpec((d_inner,), ("ssm_inner",), ones_init),
+        "down_proj": ParamSpec((d_inner, d_model), ("ssm_inner", "embed"), fan_in_init),
+    }
+
+
+def mlstm_block_forward(p: dict, x: jax.Array, num_heads: int,
+                        state=None, conv_state=None, chunk_size: int = 64,
+                        decode: bool = False):
+    """Pre-norm residual mLSTM block.  x: [b,s,d_model]."""
+    b, s, _ = x.shape
+    h = rms_norm(x, p["norm"])
+    up = h @ p["up_proj"]
+    u, z = jnp.split(up, 2, axis=-1)                     # [b,s,d_inner] each
+    u_c, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    u_act = jax.nn.silu(u_c)
+    q = (u_act @ p["wq"]).reshape(b, s, num_heads, -1)
+    k = (u_act @ p["wk"]).reshape(b, s, num_heads, -1)
+    v = (u @ p["wv"]).reshape(b, s, num_heads, -1)
+    ig = u_act @ p["wi"] + p["bi"]                        # [b,s,h]
+    fg = u_act @ p["wf"] + p["bf"]
+    if decode:
+        y, state = mlstm_decode(q, k, v, ig, fg, state)
+    else:
+        y, state = mlstm_chunked(q, k, v, ig, fg, state, chunk_size=chunk_size)
+    y = y.reshape(b, s, -1)
+    y = rms_norm(y, p["out_norm"])
+    y = y * jax.nn.silu(z)
+    return x + y @ p["down_proj"], (state, conv_state)
+
+
+def slstm_block_specs(d_model: int, num_heads: int, ff_factor: float = 4.0 / 3.0,
+                      d_conv: int = 4) -> dict:
+    dh = d_model // num_heads
+    d_ff = int(ff_factor * d_model)
+
+    def r_init(key, shape, dtype):
+        return normal_init(key, shape, dtype, 1.0 / math.sqrt(shape[-1]))
+
+    return {
+        "norm": ParamSpec((d_model,), ("embed",), ones_init),
+        "conv_w": ParamSpec((d_conv, d_model), ("conv", "embed"),
+                            lambda k, s, d: normal_init(k, s, d, 0.1)),
+        "conv_b": ParamSpec((d_model,), ("embed",), zeros_init),
+        "w_zifo": ParamSpec((d_model, 4 * d_model), ("embed", None), fan_in_init),
+        "b_zifo": ParamSpec((4 * d_model,), (None,),
+                            lambda k, s, d: _slstm_bias_init(k, s, d, d_model)),
+        "r_z": ParamSpec((num_heads, dh, dh), (None, None, None), r_init),
+        "r_i": ParamSpec((num_heads, dh, dh), (None, None, None), r_init),
+        "r_f": ParamSpec((num_heads, dh, dh), (None, None, None), r_init),
+        "r_o": ParamSpec((num_heads, dh, dh), (None, None, None), r_init),
+        "out_norm": ParamSpec((d_model,), ("embed",), ones_init),
+        "ff_norm": ParamSpec((d_model,), ("embed",), ones_init),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "ffn"), fan_in_init),
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "ffn"), fan_in_init),
+        "w_down": ParamSpec((d_ff, d_model), ("ffn", "embed"), fan_in_init),
+    }
+
+
+def _slstm_bias_init(key, shape, dtype, d_model):
+    b = jnp.zeros(shape, jnp.float32)
+    # forget-gate bias (third quarter) init positive for long memory
+    b = b.at[2 * d_model : 3 * d_model].set(3.0)
+    return b.astype(dtype)
+
+
+def slstm_block_forward(p: dict, x: jax.Array, num_heads: int,
+                        state=None, conv_state=None):
+    """Pre-norm sLSTM block + gated FFN.  x: [b,s,d_model]."""
+    b, s, d = x.shape
+    h = rms_norm(x, p["norm"])
+    h_c, conv_state = causal_conv1d(h, p["conv_w"], p["conv_b"], conv_state)
+    h_c = jax.nn.silu(h_c)
+    zifo = h_c @ p["w_zifo"] + p["b_zifo"]
+    xz, xi, xf, xo = jnp.split(zifo, 4, axis=-1)
+    dh = d // num_heads
+    shp = (b, s, num_heads, dh)
+    y, state = slstm_scan(xz.reshape(shp), xi.reshape(shp), xf.reshape(shp),
+                          xo.reshape(shp), p["r_z"], p["r_i"], p["r_f"],
+                          p["r_o"], state)
+    y = rms_norm(y.reshape(b, s, d), p["out_norm"])
+    x = x + y
+    # gated FFN sub-block (pf = 4/3)
+    f = rms_norm(x, p["ff_norm"])
+    f = (jax.nn.silu(f @ p["w_gate"]) * (f @ p["w_up"])) @ p["w_down"]
+    return x + f, (state, conv_state)

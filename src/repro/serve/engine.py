@@ -1,0 +1,318 @@
+"""Serving engine: continuous batching over a paged KV cache.
+
+The runtime split mirrors the paper exactly:
+
+  * host side   — page allocation (kvcache/allocator = the UMap free list),
+                  admission control against pool occupancy watermarks
+                  (§3.5: stop admitting above high water, resume below low),
+                  sequence eviction (uunmap), straggler requeue;
+  * device side — one jitted ``decode_step`` whose KV pages are jit inputs
+                  ({k_pool, v_pool, table, len} per attention segment) and a
+                  jitted bucketed ``prefill``.
+
+Decode batches are fixed-width (max_batch) with empty lanes masked, so one
+compiled executable serves any active-set composition — the continuous
+batching pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, Segment
+from ..kvcache.allocator import OutOfPages, PageAllocator
+from ..models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 16
+    deadline_s: Optional[float] = None  # straggler mitigation
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    restarts: int = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    page_size: int = 16                 # tokens/page — the UMap knob
+    num_pages: int = 512                # pool size per layer (UMAP_BUFSIZE)
+    max_pages_per_seq: int = 64
+    prefill_bucket: int = 64            # prompts padded to this length
+    admit_high_water: float = 0.85      # stop admitting (paper §3.5 analogue)
+    admit_low_water: float = 0.60       # resume admitting
+    attn_impl: str = "ref"              # paged kernel impl for pool reads
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: dict, ecfg: EngineConfig):
+        assert not cfg.is_encdec and cfg.input_mode == "tokens", \
+            "engine demo targets decoder-only token models"
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.plan = cfg.decoder_plan()
+        self.allocator = PageAllocator(ecfg.num_pages)
+        # page 0 is the scratch page: idle lanes (zeroed tables) write their
+        # dummy tokens there, never into a live sequence's pages
+        self._scratch_page = self.allocator.alloc(-1, 1)[0]
+        assert self._scratch_page == 0
+        self.waiting: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.lane_of: Dict[int, int] = {}
+        self.finished: List[Request] = []
+        self._free_lanes = list(range(ecfg.max_batch - 1, -1, -1))
+        self._admission_paused = False
+        self.seq_len: Dict[int, int] = {}
+        self.stats = {"steps": 0, "prefills": 0, "evictions": 0,
+                      "requeues": 0, "admission_pauses": 0}
+        self._caches = self._init_caches()
+        self._decode = jax.jit(partial(T.decode_step, cfg))
+
+    # --------------------------------------------------------------- caches
+
+    def _init_caches(self) -> list:
+        e = self.ecfg
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        caches = []
+        for seg in self.plan:
+            if seg.has_attention:
+                c = {
+                    "k_pool": jnp.zeros(
+                        (seg.count, e.num_pages, e.page_size,
+                         self.cfg.num_kv_heads, self.cfg.head_dim), dt),
+                    "v_pool": jnp.zeros(
+                        (seg.count, e.num_pages, e.page_size,
+                         self.cfg.num_kv_heads, self.cfg.head_dim), dt),
+                    "table": jnp.zeros(
+                        (seg.count, e.max_batch, e.max_pages_per_seq), jnp.int32),
+                    "len": jnp.zeros((seg.count, e.max_batch), jnp.int32),
+                }
+                if seg.has_mamba:
+                    from ..models.blocks import block_cache_init
+                    mc = block_cache_init(self.cfg, seg, e.max_batch, 8, dt)
+                    c["ssm"] = jnp.broadcast_to(
+                        mc["ssm"], (seg.count,) + mc["ssm"].shape).copy()
+                    c["conv"] = jnp.broadcast_to(
+                        mc["conv"], (seg.count,) + mc["conv"].shape).copy()
+            else:
+                from ..models.blocks import block_cache_init
+                layer = block_cache_init(self.cfg, seg, e.max_batch, 8, dt)
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (seg.count,) + a.shape).copy(),
+                    layer)
+            caches.append(c)
+        return caches
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _watermark_gate(self) -> bool:
+        """UMap §3.5 watermarks on pool occupancy gate admission."""
+        occ = self.allocator.occupancy()
+        if self._admission_paused:
+            if occ < self.ecfg.admit_low_water:
+                self._admission_paused = False
+        elif occ >= self.ecfg.admit_high_water:
+            self._admission_paused = True
+            self.stats["admission_pauses"] += 1
+        return not self._admission_paused
+
+    def _try_admit(self) -> None:
+        while (self.waiting and self._free_lanes and self._watermark_gate()):
+            req = self.waiting[0]
+            S = len(req.prompt)
+            need = -(-(S + self.cfg.num_meta_tokens) // self.ecfg.page_size) + 1
+            if self.allocator.free_pages < need:
+                break
+            self.waiting.pop(0)
+            self._prefill_into_pool(req)
+
+    # -------------------------------------------------------------- prefill
+
+    def _prefill_into_pool(self, req: Request) -> None:
+        """Prefill prompt[:-1] into pool pages; the last prompt token is fed
+        as the first decode step (standard prefill/decode split).
+
+        Recurrent segments (mamba/mlstm/slstm) carry state, so right-padding
+        would corrupt it — those archs prefill at exact length; pure-attention
+        archs pad to the compile bucket (causality makes padding harmless).
+        """
+        e = self.ecfg
+        prompt = req.prompt[:-1]
+        S = len(prompt)
+        has_recurrent = any(seg.has_mamba or not seg.has_attention
+                            for seg in self.plan)
+        if has_recurrent or S == 0:
+            bucket = max(S, 1)
+        else:
+            bucket = max(e.prefill_bucket,
+                         -(-S // e.prefill_bucket) * e.prefill_bucket)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :S] = prompt
+        cache = T.init_cache(self.cfg, 1, bucket + 8 + self.cfg.num_meta_tokens)
+        _, cache = T.prefill(self.cfg, self.params,
+                             {"tokens": jnp.asarray(tokens)}, cache)
+        lane = self._free_lanes.pop()
+        eff_final = S + 1 + self.cfg.num_meta_tokens  # incl. pending last token
+        pages = self.allocator.alloc(req.rid, -(-eff_final // e.page_size) + 1)
+        eff = S + self.cfg.num_meta_tokens
+        for i, (seg, c) in enumerate(zip(self.plan, self._caches)):
+            if not seg.has_attention:
+                # recurrent caches: copy prefilled state into the lane
+                self._caches[i] = _copy_state_lane(c, cache[i], lane, eff)
+                continue
+            # move prefilled contiguous KV into pool pages for this lane
+            k = cache[i]["k"][:, 0, :eff]
+            v = cache[i]["v"][:, 0, :eff]
+            self._caches[i] = _install_pages(
+                c, k, v, pages, lane, e.page_size, e.max_pages_per_seq,
+                prior_state=cache[i] if seg.has_mamba else None)
+        self.active[req.rid] = req
+        self.lane_of[req.rid] = lane
+        self.seq_len[req.rid] = eff
+        self.stats["prefills"] += 1
+
+    # --------------------------------------------------------------- decode
+
+    def step(self) -> int:
+        """One engine iteration: admit, decode the active set, retire."""
+        self._try_admit()
+        if not self.active:
+            return 0
+        e = self.ecfg
+        tokens = np.zeros(e.max_batch, np.int32)
+        cur = np.zeros(e.max_batch, np.int32)
+        live = []
+        now = time.time()
+        for rid, req in list(self.active.items()):
+            # straggler mitigation: requeue requests past their deadline
+            if req.deadline_s and now - req.submitted_at > req.deadline_s:
+                self._evict(rid, requeue=True)
+                continue
+            lane = self.lane_of[rid]
+            last = req.generated[-1] if req.generated else int(req.prompt[-1])
+            tokens[lane] = last
+            cur[lane] = self.seq_len[rid]
+            live.append(rid)
+        if not live:
+            return 0
+
+        # page allocation for lanes crossing a page boundary (host side)
+        for rid in live:
+            if self.seq_len[rid] % e.page_size == 0:
+                try:
+                    self.allocator.alloc(rid, 1)
+                except OutOfPages:
+                    self._evict(rid, requeue=True)
+                    live.remove(rid)
+        if not live:
+            return 0
+        self._sync_tables(live)
+
+        logits, self._caches = self._decode(
+            self.params, self._caches, jnp.asarray(tokens), jnp.asarray(cur))
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        for rid in live:
+            lane = self.lane_of[rid]
+            req = self.active[rid]
+            req.generated.append(int(next_tokens[lane]))
+            self.seq_len[rid] += 1
+            if req.done:
+                self._retire(rid)
+        self.stats["steps"] += 1
+        return len(live)
+
+    def _sync_tables(self, live: List[int]) -> None:
+        e = self.ecfg
+        table = np.zeros((e.max_batch, e.max_pages_per_seq), np.int32)
+        lens = np.zeros(e.max_batch, np.int32)
+        for rid in live:
+            lane = self.lane_of[rid]
+            table[lane] = self.allocator.table_for(rid, e.max_pages_per_seq)
+            lens[lane] = self.seq_len[rid]
+        tj = jnp.asarray(table)
+        lj = jnp.asarray(lens)
+        for i, (seg, c) in enumerate(zip(self.plan, self._caches)):
+            if seg.has_attention:
+                c = dict(c)
+                c["table"] = jnp.broadcast_to(tj, c["table"].shape)
+                c["len"] = jnp.broadcast_to(lj, c["len"].shape)
+                self._caches[i] = c
+
+    # ------------------------------------------------------------- eviction
+
+    def _evict(self, rid: int, requeue: bool) -> None:
+        """uunmap analogue: free all pages + lane; optionally requeue."""
+        self.allocator.free_seq(rid)
+        lane = self.lane_of.pop(rid)
+        self._free_lanes.append(lane)
+        req = self.active.pop(rid)
+        self.seq_len.pop(rid, None)
+        self.stats["evictions"] += 1
+        if requeue:
+            req.restarts += 1
+            req.submitted_at = time.time()
+            self.waiting.append(req)
+            self.stats["requeues"] += 1
+
+    def _retire(self, rid: int) -> None:
+        self.allocator.free_seq(rid)
+        lane = self.lane_of.pop(rid)
+        self._free_lanes.append(lane)
+        self.seq_len.pop(rid, None)
+        self.finished.append(self.active.pop(rid))
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.waiting and not self.active:
+                return
+            self.step()
+
+
+# ---------------------------------------------------------------- helpers
+
+
+def _install_pages(cache, k, v, pages, lane, page_size, max_pages,
+                   prior_state=None):
+    """Scatter contiguous prefilled KV [L, S, KVH, D] into pool pages."""
+    L, S = k.shape[0], k.shape[1]
+    n_pages = -(-S // page_size)
+    pad = n_pages * page_size - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = k.reshape(L, n_pages, page_size, *k.shape[2:])
+    vp = v.reshape(L, n_pages, page_size, *v.shape[2:])
+    idx = jnp.asarray(pages[:n_pages], jnp.int32)
+    out = dict(cache)
+    out["k_pool"] = cache["k_pool"].at[:, idx].set(kp.astype(cache["k_pool"].dtype))
+    out["v_pool"] = cache["v_pool"].at[:, idx].set(vp.astype(cache["v_pool"].dtype))
+    if prior_state is not None and "ssm" in cache:
+        out["ssm"] = cache["ssm"].at[:, lane].set(prior_state["ssm"][:, 0])
+        out["conv"] = cache["conv"].at[:, lane].set(prior_state["conv"][:, 0])
+    return out
+
+
+def _copy_state_lane(cache, prefilled, lane, eff_len):
+    """Copy recurrent (mlstm/slstm) prefilled state into an engine lane."""
+    def cp(dst, src):
+        return dst.at[:, lane].set(src[:, 0])
+
+    return jax.tree.map(cp, cache, prefilled)

@@ -1,0 +1,106 @@
+"""Layer-weight pager: UMap regions over *model weights* (host -> HBM).
+
+For models whose parameters exceed device memory (or to free HBM for KV),
+per-layer weight pytrees live in host memory (the backing store) and page
+into a fixed ring of device slots (the UMap buffer).  The access pattern is
+known (layer i+1 follows layer i), so the pager is purely anticipatory:
+``readahead`` layers are always in flight — the paper's §2 adaptation
+(reactive faults -> anticipatory fills, DESIGN.md §2).
+
+Filler concurrency is real: transfers are issued by a worker thread through
+``jax.device_put`` (async under JAX's dispatch), overlapping host->device
+copies with the consumer's compute.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+class LayerWeightPager:
+    def __init__(self, host_layers: List[PyTree], num_slots: int = 4,
+                 readahead: int = 2, device=None):
+        assert num_slots >= readahead + 1
+        self.host_layers = host_layers
+        self.num_layers = len(host_layers)
+        self.num_slots = num_slots
+        self.readahead = readahead
+        self.device = device or jax.devices()[0]
+        self._slots: Dict[int, PyTree] = {}         # layer -> device tree
+        self._order: List[int] = []                  # FIFO residency (stream)
+        self._events: Dict[int, threading.Event] = {}
+        self._lock = threading.Lock()
+        self._q: "queue.Queue" = queue.Queue()
+        self._filler = threading.Thread(target=self._fill_loop, daemon=True,
+                                        name="weight-pager-filler")
+        self._filler.start()
+        self.stats = {"fills": 0, "hits": 0, "waits": 0, "evictions": 0}
+
+    # ------------------------------------------------------------- pager
+
+    def _fill_loop(self) -> None:
+        while True:
+            layer = self._q.get()
+            if layer is None:
+                return
+            with self._lock:
+                if layer in self._slots or layer in self._events and \
+                        self._events[layer].is_set():
+                    continue
+                ev = self._events.setdefault(layer, threading.Event())
+            tree = jax.device_put(self.host_layers[layer], self.device)
+            with self._lock:
+                self._slots[layer] = tree
+                self._order.append(layer)
+                self.stats["fills"] += 1
+                while len(self._slots) > self.num_slots:
+                    victim = self._order.pop(0)       # forward stream: FIFO/SWA
+                    self._slots.pop(victim, None)
+                    self._events.pop(victim, None)
+                    self.stats["evictions"] += 1
+                ev.set()
+
+    def prefetch(self, layer: int) -> None:
+        if 0 <= layer < self.num_layers:
+            with self._lock:
+                if layer in self._slots or layer in self._events:
+                    return
+                self._events[layer] = threading.Event()
+            self._q.put(layer)
+
+    def get(self, layer: int) -> PyTree:
+        """Block until layer resident; issues readahead for the next layers."""
+        for ahead in range(1, self.readahead + 1):
+            self.prefetch(layer + ahead)
+        with self._lock:
+            tree = self._slots.get(layer)
+            ev = self._events.get(layer)
+        if tree is not None:
+            self.stats["hits"] += 1
+            return tree
+        if ev is None:
+            self.prefetch(layer)
+            with self._lock:
+                ev = self._events[layer]
+        self.stats["waits"] += 1
+        ev.wait()
+        with self._lock:
+            return self._slots[layer]
+
+    def run(self, x, apply_fn: Callable[[PyTree, Any, int], Any]):
+        """Stream x through all layers: apply_fn(layer_params, x, i)."""
+        self.prefetch(0)
+        for i in range(self.num_layers):
+            x = apply_fn(self.get(i), x, i)
+        return x
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._filler.join(timeout=5)

@@ -1,0 +1,61 @@
+"""Loss: sequence-chunked softmax cross-entropy.
+
+Materializing [B, S, V] logits for a 1M-token global batch over a 128k vocab
+costs ~0.5 TB in fp32.  Chunking the sequence dimension inside a scan keeps
+the live logits tensor at [B, chunk, V] and lets XLA overlap the unembedding
+matmuls with the reductions — one of the standing memory optimizations
+recorded in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.transformer import lm_logits
+
+
+def chunked_cross_entropy(cfg: ModelConfig, params: dict, hidden: jax.Array,
+                          labels: jax.Array,
+                          mask: Optional[jax.Array] = None,
+                          chunk: int = 1024,
+                          z_loss_coeff: float = 0.0,
+                          ) -> Tuple[jax.Array, dict]:
+    """hidden [B,S,d], labels [B,S] -> (mean NLL over mask, metrics)."""
+    b, s, d = hidden.shape
+    cs = min(chunk, s)
+    if s % cs:
+        pad = cs - s % cs
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None
+                       else jnp.ones((b, s), bool), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, s), bool)
+    sp = hidden.shape[1]
+    nc = sp // cs
+
+    def step(carry, xs):
+        nll_sum, z_sum, cnt = carry
+        h_c, y_c, m_c = xs                    # [B,cs,d], [B,cs], [B,cs]
+        logits = lm_logits(cfg, params, h_c).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m_c
+        zl = jnp.square(lse) * m_c
+        return (nll_sum + nll.sum(), z_sum + zl.sum(), cnt + m_c.sum()), None
+
+    xs = (hidden.reshape(b, nc, cs, d).swapaxes(0, 1),
+          labels.reshape(b, nc, cs).swapaxes(0, 1),
+          mask.reshape(b, nc, cs).swapaxes(0, 1).astype(jnp.float32))
+    (nll_sum, z_sum, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), xs)
+    cnt = jnp.maximum(cnt, 1.0)
+    loss = nll_sum / cnt
+    if z_loss_coeff:
+        loss = loss + z_loss_coeff * z_sum / cnt
+    return loss, {"nll": nll_sum / cnt, "tokens": cnt}

@@ -1,0 +1,78 @@
+"""The jitted training step: loss -> grads -> (compressed) reduce -> AdamW.
+
+Under pjit, gradient reduction across the data axis is implicit in GSPMD's
+partitioning of the backward pass; the optional int8 compression hook
+(distributed/collectives.py) re-expresses that reduction explicitly via
+quantize -> psum -> dequantize with error feedback, for bandwidth-bound
+interconnects (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.transformer import forward_train
+from .loss import chunked_cross_entropy
+from .optimizer import AdamWConfig, AdamWState, apply_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    moe_lb_coeff: float = 0.01
+    moe_z_coeff: float = 0.001
+    z_loss_coeff: float = 1e-4
+    loss_chunk: int = 1024
+    microbatches: int = 1        # sequential microbatching (grad accumulation)
+
+
+def loss_fn(cfg: ModelConfig, tcfg: TrainConfig, params: dict, batch: dict
+            ) -> Tuple[jax.Array, dict]:
+    hidden, aux = forward_train(cfg, params, batch)
+    loss, metrics = chunked_cross_entropy(
+        cfg, params, hidden, batch["labels"], batch.get("loss_mask"),
+        chunk=tcfg.loss_chunk, z_loss_coeff=tcfg.z_loss_coeff)
+    if aux:
+        loss = (loss
+                + tcfg.moe_lb_coeff * aux["moe_lb_loss"]
+                + tcfg.moe_z_coeff * aux["moe_z_loss"])
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def train_step(cfg: ModelConfig, tcfg: TrainConfig, params: dict,
+               opt_state: AdamWState, batch: dict
+               ) -> Tuple[dict, AdamWState, dict]:
+    """One optimizer step (optionally over sequential microbatches)."""
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            partial(loss_fn, cfg, tcfg), has_aux=True)(params, batch)
+    else:
+        mb = tcfg.microbatches
+        split = jax.tree.map(
+            lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+        def acc_step(carry, mbatch):
+            g_acc, l_acc = carry
+            (l, m), g = jax.value_and_grad(
+                partial(loss_fn, cfg, tcfg), has_aux=True)(params, mbatch)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / mb, g_acc, g)
+            return (g_acc, l_acc + l / mb), m
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), ms = jax.lax.scan(acc_step, (g0, 0.0), split)
+        metrics = jax.tree.map(lambda x: x[-1], ms)
+        metrics["loss"] = loss
+
+    params, opt_state, opt_metrics = apply_update(
+        tcfg.optimizer, params, grads, opt_state)
+    metrics.update(opt_metrics)
+    return params, opt_state, metrics

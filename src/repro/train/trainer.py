@@ -1,0 +1,109 @@
+"""Training loop: data pipeline -> jitted step -> async checkpointing.
+
+Fault-tolerance contract (DESIGN.md §4):
+  * resume: picks up from the newest durable checkpoint (params + optimizer
+    state + step + data-pipeline position);
+  * async saves through ckpt.AsyncCheckpointer (watermark-bounded);
+  * preemption: ``request_stop`` (or SIGTERM from the launcher) triggers a
+    final synchronous flush before exit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from functools import partial
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt import checkpoint as ckpt
+from ..configs.base import ModelConfig
+from ..models import transformer as T
+from .optimizer import init_state
+from .train_step import TrainConfig, train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.step = 0
+        self.params = T.init_params(cfg, rng if rng is not None else jax.random.key(0))
+        self.opt_state = init_state(self.params)
+        self._jit_step = jax.jit(partial(train_step, cfg, tcfg.train))
+        self._stop = False
+        self.metrics_log: list = []
+        self.ckptr = (ckpt.AsyncCheckpointer(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+                      if tcfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------- restart
+
+    def try_resume(self) -> bool:
+        if not self.tcfg.ckpt_dir:
+            return False
+        step = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return False
+        state = ckpt.restore(self.tcfg.ckpt_dir, step,
+                             {"params": self.params, "opt": self.opt_state,
+                              "step": 0})
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, state["opt"])
+        self.step = int(state["step"])
+        return True
+
+    def request_stop(self, *_) -> None:
+        self._stop = True
+
+    def install_preemption_handler(self) -> None:
+        signal.signal(signal.SIGTERM, self.request_stop)
+
+    # ----------------------------------------------------------------- run
+
+    def fit(self, batches: Iterable[dict]) -> dict:
+        t0 = time.time()
+        tokens_done = 0
+        for batch in batches:
+            if self.step >= self.tcfg.total_steps or self._stop:
+                break
+            jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, jbatch)
+            self.step += 1
+            tokens_done += int(np.prod(jbatch["labels"].shape))
+            if self.step % self.tcfg.log_every == 0 or self.step == 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step
+                m["tokens_per_s"] = tokens_done / max(1e-9, time.time() - t0)
+                self.metrics_log.append(m)
+            if self.ckptr and self.step % self.tcfg.ckpt_every == 0:
+                self.ckptr.save_async(self.step, {
+                    "params": self.params, "opt": self.opt_state,
+                    "step": self.step})
+        # final flush (preemption-safe exit)
+        if self.ckptr:
+            self.ckptr.save_async(self.step, {
+                "params": self.params, "opt": self.opt_state,
+                "step": self.step})
+            self.ckptr.flush()
+        return {
+            "final_step": self.step,
+            "loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "history": self.metrics_log,
+        }

@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train-gradient step on CPU, asserting output shapes + finiteness (assignment
+requirement f).  Full configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.configs.base import SHAPES
+from repro.configs.registry import (
+    ARCH_IDS,
+    get_config,
+    get_smoke_config,
+    runnable_cells,
+    skipped_cells,
+)
+
+B, S = 2, 16
+
+
+def make_batch(cfg, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    batch = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        if cfg.mrope_sections is not None:
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, 3, S)).copy()
+            batch["positions"] = jnp.asarray(pos)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)
+    if cfg.is_encdec:
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(B, 12, cfg.d_model)), jnp.float32)
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    hid, aux = M.forward_train(cfg, params, batch)
+    assert hid.shape == (B, S, cfg.d_model)
+    assert np.isfinite(np.asarray(hid)).all(), f"{arch}: non-finite hidden"
+    logits = M.lm_logits(cfg, params, hid)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    # padded vocab region masked
+    if cfg.padded_vocab != cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size :].max()) < -1e8
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step_gradient(arch):
+    """One loss+grad step: finite loss, finite grads, params update."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+
+    def loss_fn(p):
+        hid, aux = M.forward_train(cfg, p, batch)
+        logits = M.lm_logits(cfg, p, hid).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(lp, batch["labels"][..., None], axis=-1)
+        loss = -ll.mean()
+        if aux:
+            loss = loss + 0.01 * aux["moe_lb_loss"] + 0.001 * aux["moe_z_loss"]
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: grad not finite"
+    assert float(gnorm) > 0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_matches_forward(arch):
+    """prefill(s-1) + decode(1) must equal the full forward's last logits."""
+    cfg = get_smoke_config(arch)
+    if cfg.input_mode == "embeds":
+        pytest.skip("stub-frontend archs decode from token embeds; covered "
+                    "by test_models_decode paths")
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    hid, _ = M.forward_train(cfg, params, batch)
+    ref = M.lm_logits(cfg, params, hid)[:, -1]
+
+    cache = M.init_cache(cfg, B, S + 4, memory_len=12 if cfg.is_encdec else None)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :-1]
+    _, cache = M.prefill(cfg, params, pre, cache)
+    cur = jnp.full((B,), S - 1 + cfg.num_meta_tokens, jnp.int32)
+    logits, _ = M.decode_step(cfg, params, cache, batch["tokens"][:, -1], cur)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(ref), rtol=2e-3, atol=2e-4)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact published dimensions."""
+    expect = {
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v), arch
+    assert get_config("hymba-1.5b").ssm_state == 16
+    assert get_config("mixtral-8x7b").num_experts == 8
+    assert get_config("phi3.5-moe-42b-a6.6b").num_experts == 16
+    assert get_config("seamless-m4t-medium").enc_layers == 12
+
+
+def test_cell_matrix_accounting():
+    """40 assigned cells = 33 runnable + 7 documented long_500k skips."""
+    cells = runnable_cells()
+    skips = skipped_cells()
+    assert len(cells) + len(skips) == len(ARCH_IDS) * len(SHAPES) == 40
+    assert len(cells) == 33
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"hymba-1.5b", "mixtral-8x7b", "xlstm-1.3b"}
+
+
+def test_padding_is_function_preserving():
+    """Padded Q heads (zero o_proj rows) leave the function unchanged."""
+    cfg_pad = get_smoke_config("smollm-135m")          # 3 heads -> pad to 4
+    cfg_nopad = cfg_pad.replace(head_pad_multiple=1)   # no padding
+    assert cfg_pad.padded_heads == 4 and cfg_nopad.padded_heads == 3
+    p_nopad = M.init_params(cfg_nopad, jax.random.key(0))
+    p_pad = jax.tree.map(lambda x: x, p_nopad)  # copy
+
+    # embed padded params from unpadded ones: wq columns 0-pad, wo rows 0-pad
+    def pad_attn(attn):
+        out = dict(attn)
+        H, D, E = 4, cfg_pad.head_dim, cfg_pad.d_model
+
+        def pad_one(wq, wo):
+            wq = wq.reshape(E, 3, D)
+            wq = jnp.concatenate([wq, jnp.zeros((E, 1, D), wq.dtype)],
+                                 axis=1).reshape(E, H * D)
+            wo = wo.reshape(3, D, E)
+            wo = jnp.concatenate([wo, jnp.zeros((1, D, E), wo.dtype)],
+                                 axis=0).reshape(H * D, E)
+            return wq, wo
+
+        out["wq"], out["wo"] = jax.vmap(pad_one)(attn["wq"], attn["wo"])
+        return out
+
+    segs = []
+    for seg_p in p_nopad["segments"]:
+        sp = dict(seg_p)
+        sp["attn"] = pad_attn(seg_p["attn"])
+        segs.append(sp)
+    p_pad = dict(p_nopad)
+    p_pad["segments"] = segs
+
+    batch = make_batch(cfg_nopad)
+    h0, _ = M.forward_train(cfg_nopad, p_nopad, batch)
+    h1, _ = M.forward_train(cfg_pad, p_pad, batch)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,59 @@
+import pytest
+
+from repro.core import UMapConfig, parse_size
+
+
+def test_parse_size():
+    assert parse_size(123) == 123
+    assert parse_size("4096") == 4096
+    assert parse_size("64K") == 64 * 1024
+    assert parse_size("8M") == 8 * 1024**2
+    assert parse_size("1GiB") == 1024**3
+    assert parse_size("2kb") == 2048
+
+
+def test_env_parity():
+    env = {
+        "UMAP_PAGESIZE": "512K",
+        "UMAP_BUFSIZE": "64M",
+        "UMAP_PAGE_FILLERS": "48",
+        "UMAP_PAGE_EVICTORS": "24",
+        "UMAP_EVICT_HIGH_WATER_THRESHOLD": "90",
+        "UMAP_EVICT_LOW_WATER_THRESHOLD": "70",
+        "UMAP_READ_AHEAD": "4",
+        "UMAP_MAX_FAULT_EVENTS": "16",
+    }
+    cfg = UMapConfig.from_env(env)
+    assert cfg.page_size == 512 * 1024
+    assert cfg.buffer_size == 64 * 1024**2
+    assert cfg.num_fillers == 48 and cfg.num_evictors == 24
+    assert cfg.evict_high_water == pytest.approx(0.9)
+    assert cfg.evict_low_water == pytest.approx(0.7)
+    assert cfg.read_ahead == 4
+    assert cfg.max_fault_events == 16
+    assert cfg.num_slots == 128
+
+
+def test_defaults_match_paper():
+    cfg = UMapConfig()
+    assert cfg.evict_high_water == pytest.approx(0.90)   # paper default 90%
+    assert cfg.evict_low_water == pytest.approx(0.70)    # paper default 70%
+    assert cfg.read_ahead == 0                           # paper default 0
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        UMapConfig(page_size=0)
+    with pytest.raises(ValueError):
+        UMapConfig(page_size=8192, buffer_size=4096)
+    with pytest.raises(ValueError):
+        UMapConfig(evict_high_water=0.5, evict_low_water=0.9)
+    with pytest.raises(ValueError):
+        UMapConfig(num_fillers=0)
+
+
+def test_mmap_baseline_semantics():
+    cfg = UMapConfig.mmap_baseline(buffer_size=1 << 20)
+    assert cfg.page_size == 4096          # fixed kernel page
+    assert cfg.mmap_compat
+    assert cfg.evict_high_water == pytest.approx(0.10)  # RHEL 10%-dirty flush

@@ -1,0 +1,92 @@
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FileStore,
+    HostArrayStore,
+    MultiFileStore,
+    RemoteStore,
+    SyntheticStore,
+)
+
+
+def test_file_store_roundtrip(tmp_path):
+    p = tmp_path / "blob.bin"
+    st = FileStore(str(p), size=64 * 1024, create=True)
+    payload = np.random.default_rng(0).integers(0, 256, 5000, dtype=np.uint8)
+    st.write_from(1234, payload)
+    out = np.empty(5000, np.uint8)
+    st.read_into(1234, out)
+    assert np.array_equal(out, payload)
+    st.close()
+
+
+def test_file_store_eof_zero_fill(tmp_path):
+    p = tmp_path / "short.bin"
+    st = FileStore(str(p), size=100, create=True)
+    st.write_from(0, np.full(100, 9, np.uint8))
+    buf = np.full(256, 7, np.uint8)
+    got = st.read_into(0, buf)
+    assert got == 100
+    assert (buf[:100] == 9).all() and (buf[100:] == 0).all()
+    st.close()
+
+
+def test_multi_file_store_spans_extents(tmp_path):
+    stores = []
+    for i in range(3):
+        s = FileStore(str(tmp_path / f"f{i}.bin"), size=1000, create=True)
+        s.write_from(0, np.full(1000, i + 1, np.uint8))
+        stores.append(s)
+    # map [f0 bytes 100:600), [f1 all), [f2 bytes 0:500) contiguously
+    mf = MultiFileStore([(stores[0], 100, 500), (stores[1], 0, 1000), (stores[2], 0, 500)])
+    assert mf.size == 2000
+    buf = np.empty(2000, np.uint8)
+    mf.read_into(0, buf)
+    assert (buf[:500] == 1).all() and (buf[500:1500] == 2).all() and (buf[1500:] == 3).all()
+    # a read spanning the f0/f1 boundary (paper §6.4: one fault, many files)
+    buf2 = np.empty(200, np.uint8)
+    mf.read_into(400, buf2)
+    assert (buf2[:100] == 1).all() and (buf2[100:] == 2).all()
+    # write across a boundary and read back
+    mf.write_from(450, np.full(100, 7, np.uint8))
+    buf3 = np.empty(100, np.uint8)
+    mf.read_into(450, buf3)
+    assert (buf3 == 7).all()
+    mf.close()
+
+
+def test_remote_store_latency_model():
+    inner = HostArrayStore(np.zeros(1 << 16, np.uint8))
+    remote = RemoteStore(inner, latency_s=0.01, bandwidth_Bps=1e9)
+    buf = np.empty(4096, np.uint8)
+    t0 = time.perf_counter()
+    remote.read_into(0, buf)
+    assert time.perf_counter() - t0 >= 0.01
+
+
+def test_synthetic_store_generator_and_overlay():
+    def gen(offset, buf):
+        idx = np.arange(offset, offset + buf.nbytes, dtype=np.uint64)
+        buf[:] = (idx % 251).astype(np.uint8)
+
+    st = SyntheticStore(size=1 << 20, generator=gen, overlay_page=4096)
+    buf = np.empty(100, np.uint8)
+    st.read_into(1000, buf)
+    assert np.array_equal(buf, (np.arange(1000, 1100) % 251).astype(np.uint8))
+    st.write_from(5000, np.full(100, 77, np.uint8))
+    out = np.empty(300, np.uint8)
+    st.read_into(4900, out)
+    assert np.array_equal(out[:100], (np.arange(4900, 5000) % 251).astype(np.uint8))
+    assert (out[100:200] == 77).all()
+    assert np.array_equal(out[200:], (np.arange(5100, 5200) % 251).astype(np.uint8))
+
+
+def test_store_stats_counting():
+    st = HostArrayStore(np.zeros(8192, np.uint8))
+    st.read_into(0, np.empty(1024, np.uint8))
+    st.write_from(0, np.ones(512, np.uint8))
+    assert st.bytes_read == 1024 and st.num_reads == 1
+    assert st.bytes_written == 512 and st.num_writes == 1

@@ -1,0 +1,167 @@
+"""Chunked-vs-sequential oracles for the recurrent cores (ssm / xlstm) and
+the chunked attention path vs dense attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import AttnSpec, attention, decode_attention
+from repro.models.ssm import (
+    selective_scan,
+    selective_scan_decode,
+    selective_scan_ref,
+)
+from repro.models.xlstm import mlstm_chunked, mlstm_ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(3, 60), d=st.sampled_from([4, 8]),
+    n=st.sampled_from([2, 4]), cs=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_selective_scan_matches_ref(s, d, n, cs, seed):
+    rng = np.random.default_rng(seed)
+    b = 2
+    x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32))
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(d, n)), jnp.float32))
+    D = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y_ref, h_ref = selective_scan_ref(x, dt, B, C, A, D)
+    y, h = selective_scan(x, dt, B, C, A, D, chunk_size=cs)
+    np.testing.assert_allclose(y, y_ref, atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(h, h_ref, atol=5e-4, rtol=5e-3)
+
+
+def test_selective_scan_decode_chain():
+    """Sequential decode steps == full-sequence scan."""
+    rng = np.random.default_rng(0)
+    b, s, d, n = 2, 10, 4, 4
+    x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32))
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(d, n)), jnp.float32))
+    D = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y_ref, _ = selective_scan_ref(x, dt, B, C, A, D)
+    h = jnp.zeros((b, d, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, h = selective_scan_decode(x[:, t], dt[:, t], B[:, t], C[:, t], A, D, h)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_ref, atol=5e-4, rtol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(3, 50), cs=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlstm_chunked_matches_ref(s, cs, seed):
+    rng = np.random.default_rng(seed)
+    b, h, dk, dv = 2, 2, 8, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32) * 0.5
+    v = jnp.asarray(rng.normal(size=(b, s, h, dv)), jnp.float32)
+    ig = jnp.asarray(rng.normal(size=(b, s, h)), jnp.float32)
+    fg = jnp.asarray(rng.normal(size=(b, s, h)), jnp.float32) + 2.0
+    y_ref, st_ref = mlstm_ref(q, k, v, ig, fg)
+    y, st_ = mlstm_chunked(q, k, v, ig, fg, chunk_size=cs)
+    np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-2)
+    np.testing.assert_allclose(st_[0], st_ref[0], atol=1e-3, rtol=1e-2)
+
+
+@pytest.mark.parametrize("causal_skip", [False, True])
+@pytest.mark.parametrize("window", [None, 8])
+def test_chunked_attention_matches_dense(causal_skip, window):
+    rng = np.random.default_rng(0)
+    b, s, h, d = 2, 64, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    dense = attention(q, k, v, AttnSpec(causal=True, window=window,
+                                        impl="dense"), pos, pos)
+    chunked = attention(q, k, v, AttnSpec(causal=True, window=window,
+                                          impl="chunked", chunk_size=16,
+                                          causal_skip=causal_skip), pos, pos)
+    np.testing.assert_allclose(chunked, dense, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ring_cache_window():
+    """Ring cache + window mask == dense attention over the window."""
+    rng = np.random.default_rng(1)
+    b, h, d, W = 1, 2, 8, 8
+    S_total = 20
+    k_all = jnp.asarray(rng.normal(size=(b, S_total, h, d)), jnp.float32)
+    v_all = jnp.asarray(rng.normal(size=(b, S_total, h, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    cur = S_total - 1
+    # ring cache holding the last W tokens at slot = pos % W
+    kc = jnp.zeros((b, W, h, d), jnp.float32)
+    vc = jnp.zeros((b, W, h, d), jnp.float32)
+    pos_arr = jnp.full((b, W), -1, jnp.int32)
+    for p in range(S_total):
+        kc = kc.at[:, p % W].set(k_all[:, p])
+        vc = vc.at[:, p % W].set(v_all[:, p])
+        pos_arr = pos_arr.at[:, p % W].set(p)
+    out = decode_attention(q, kc, vc, pos_arr,
+                           jnp.full((b,), cur, jnp.int32), window=W)
+    # dense reference over the last W positions
+    pos = jnp.broadcast_to(jnp.arange(S_total, dtype=jnp.int32), (b, S_total))
+    ref = attention(q, k_all, v_all,
+                    AttnSpec(causal=True, window=W, impl="dense"),
+                    jnp.full((b, 1), cur, jnp.int32), pos)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_vjp_gradients_match_dense():
+    """Custom-VJP chunked attention gradients == dense-attention gradients."""
+    rng = np.random.default_rng(3)
+    b, s, h, kvh, d = 2, 32, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    tgt = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+
+    def loss(impl):
+        def f(q, k, v):
+            o = attention(q, k, v, AttnSpec(causal=True, window=None,
+                                            impl=impl, chunk_size=8),
+                          pos, pos)
+            return jnp.sum((o.astype(jnp.float32) - tgt) ** 2)
+        return f
+
+    ld, gd = jax.value_and_grad(loss("dense"), argnums=(0, 1, 2))(q, k, v), None
+    lc = jax.value_and_grad(loss("chunked"), argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(float(ld[0]), float(lc[0]), rtol=1e-5)
+    for a, b_ in zip(ld[1], lc[1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_flash_vjp_gradients_window():
+    rng = np.random.default_rng(4)
+    b, s, h, d = 1, 24, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def loss(impl):
+        def f(q, k, v):
+            o = attention(q, k, v, AttnSpec(causal=True, window=6, impl=impl,
+                                            chunk_size=8), pos, pos)
+            return jnp.sum(o.astype(jnp.float32) ** 2)
+        return f
+
+    gd = jax.grad(loss("dense"), argnums=(0, 1, 2))(q, k, v)
+    gc = jax.grad(loss("chunked"), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gd, gc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-4, rtol=2e-3)
