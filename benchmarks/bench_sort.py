@@ -107,10 +107,23 @@ def run(quick: bool = True) -> list:
     t = timeit(lambda: _sort_through_region(src, cfg, n_bytes))
     rows.append(Row("sort", "mmap", 4096, t))
 
+    best_ps, best_t = sizes[0], float("inf")
     for ps in sizes:
         _make_dataset(src, n_bytes)  # re-shuffle not needed; same work
         cfg = UMapConfig(page_size=ps, buffer_size=buffer, num_fillers=8,
                          num_evictors=4, read_ahead=2)
         t = timeit(lambda: _sort_through_region(src, cfg, n_bytes))
         rows.append(Row("sort", "umap", ps, t))
+        if t < best_t:
+            best_ps, best_t = ps, t
+
+    # Adaptive engine (DESIGN.md §8): start with NO static advice
+    # (read_ahead=0) and let the online classifier find the settings — the
+    # claim is it matches or beats the best hand-tuned static configuration.
+    _make_dataset(src, n_bytes)
+    cfg = UMapConfig(page_size=best_ps, buffer_size=buffer, num_fillers=8,
+                     num_evictors=4, read_ahead=0, adaptive=True)
+    t = timeit(lambda: _sort_through_region(src, cfg, n_bytes))
+    rows.append(Row("sort", "umap-adaptive", best_ps, t,
+                    {"vs_best_static": best_t / t if t else float("nan")}))
     return rows

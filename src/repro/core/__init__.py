@@ -8,6 +8,7 @@
 #   watermark  dirty-page high/low-watermark flushing (§3.5)
 #   region     umap()/uunmap() mmap-like API (§4.1)
 #   hints      access advisors, prefetch planning, page-size advisor (§3.6)
+#   pattern    online access-pattern classifier — adaptive engine (DESIGN.md §8)
 
 from .buffer import (  # noqa: F401
     ClockPolicy,
@@ -24,10 +25,18 @@ from .hints import (  # noqa: F401
     PageSizeAdvisor,
     StoreProfile,
     WorkloadProfile,
+    advice_for_phase,
     apply_advice,
+    phase_for_advice,
     plan_prefetch,
 )
 from .pagetable import PageEntry, PageState, PageTable  # noqa: F401
+from .pattern import (  # noqa: F401
+    AccessPatternClassifier,
+    Phase,
+    PhaseDecision,
+    PHASE_SETTINGS,
+)
 from .pager import PagingService, ServiceStats  # noqa: F401
 from .region import UMapArrayView, UMapRegion, umap, uunmap  # noqa: F401
 from .store import (  # noqa: F401

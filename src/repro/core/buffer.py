@@ -18,7 +18,7 @@ Eviction policies are pluggable (paper §3.6 "a user-defined strategy"):
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Callable, List, Optional
+from typing import Callable, Iterable, List, Optional
 
 import numpy as np
 
@@ -41,6 +41,18 @@ class EvictionPolicy:
 
     def pick_victims(self, n: int, eligible: Callable[[PageKey], bool]) -> List[PageKey]:
         raise NotImplementedError
+
+    def adopt(self, keys: Iterable[PageKey]) -> None:
+        """Seed a fresh policy with already-resident pages.
+
+        Used by :meth:`PagingService.set_eviction_policy` to swap policies at
+        runtime (the adaptive engine retuning eviction mid-run, DESIGN.md §8)
+        without losing track of what is resident.  Recency/ref-bit history is
+        deliberately not carried over: the swap happens precisely because the
+        access pattern changed, so the old ordering is stale evidence.
+        """
+        for k in keys:
+            self.on_install(k)
 
 
 class FifoPolicy(EvictionPolicy):

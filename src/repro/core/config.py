@@ -12,6 +12,11 @@ the same name and the same default:
   UMAP_READ_AHEAD                     pages to read ahead on a demand fill (default 0)
   UMAP_MAX_FAULT_EVENTS               max fault events drained per poll (default: hw threads)
 
+Extensions beyond the paper's list (this repo's adaptive engine, DESIGN.md §8–9):
+
+  UMAP_ADAPTIVE                       enable the online access-pattern classifier (default off)
+  UMAP_MAX_BATCH_PAGES                max adjacent pages per coalesced fill (default 16; 1 disables)
+
 Programmatic control mirrors the paper's ``umapcfg_set_xx`` interfaces:
 construct :class:`UMapConfig` directly or call :func:`from_env`.
 """
@@ -97,6 +102,22 @@ class UMapConfig:
     # the asteroid FITS handler uses this).  Signature: (page_no, buf) -> None
     fill_callback: Optional[Callable] = None
 
+    # --- adaptive engine (DESIGN.md §8) -------------------------------------
+    # When True, each non-hint-pinned region gets an online access-pattern
+    # classifier (core/pattern.py) that retunes read_ahead / eviction policy
+    # from the demand-fault stream.  Static hints always take precedence.
+    adaptive: bool = False                   # UMAP_ADAPTIVE
+    pattern_window: int = 64                 # fault page-numbers per window
+    pattern_min_samples: int = 16            # faults before first classification
+    pattern_interval: int = 8                # faults between classifications
+    pattern_hysteresis: int = 2              # rounds to confirm a transition
+
+    # --- fault coalescing (DESIGN.md §9) ------------------------------------
+    # Fillers drain runs of adjacent pending pages and issue one batched
+    # store read (BackingStore.read_into_batch).  1 disables coalescing; the
+    # effective batch is min(max_batch_pages, store.batch_read_hint).
+    max_batch_pages: int = 16                # UMAP_MAX_BATCH_PAGES
+
     # --- mmap-baseline emulation --------------------------------------------
     # When True, the pager is frozen to kernel-mmap semantics: 4 KiB pages,
     # synchronous fault resolution, heuristic seq/random readahead, and an
@@ -117,6 +138,10 @@ class UMapConfig:
             )
         if self.num_fillers < 1 or self.num_evictors < 1:
             raise ValueError("need at least one filler and one evictor")
+        if self.max_batch_pages < 1:
+            raise ValueError(f"max_batch_pages must be >= 1, got {self.max_batch_pages}")
+        if self.pattern_window < 4:
+            raise ValueError(f"pattern_window must be >= 4, got {self.pattern_window}")
 
     @property
     def num_slots(self) -> int:
@@ -151,6 +176,10 @@ class UMapConfig:
             kw["read_ahead"] = int(env["UMAP_READ_AHEAD"])
         if "UMAP_MAX_FAULT_EVENTS" in env:
             kw["max_fault_events"] = int(env["UMAP_MAX_FAULT_EVENTS"])
+        if "UMAP_ADAPTIVE" in env:
+            kw["adaptive"] = env["UMAP_ADAPTIVE"].strip().lower() in ("1", "true", "yes", "on")
+        if "UMAP_MAX_BATCH_PAGES" in env:
+            kw["max_batch_pages"] = int(env["UMAP_MAX_BATCH_PAGES"])
         kw.update(overrides)
         return cls(**kw)
 
@@ -172,6 +201,8 @@ class UMapConfig:
             read_ahead=0,          # heuristic readahead handled by pager
             eviction_policy="lru",
             mmap_compat=True,
+            adaptive=False,        # the kernel has no app-pattern engine
+            max_batch_pages=1,     # kernel faults resolve one page at a time
         )
         kw.update(overrides)
         return cls(**kw)

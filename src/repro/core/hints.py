@@ -6,6 +6,10 @@ hint vocabulary:
 
   * :class:`AccessAdvice` — madvise-style per-region advice that maps to a
     concrete (readahead, eviction-policy) setting.
+  * :func:`advice_for_phase` / :func:`phase_for_advice` — the bridge between
+    this *static* vocabulary and the *online* phase vocabulary of
+    :mod:`repro.core.pattern` (the adaptive engine speaks ``Phase``, the
+    application speaks ``AccessAdvice``; both resolve to the same settings).
   * :func:`plan_prefetch` — turn an application-supplied iterator of future
     offsets into page sets, deduplicated and windowed, for
     ``region.prefetch_pages`` (irregular patterns welcome — §3.6: "UMap could
@@ -15,6 +19,12 @@ hint vocabulary:
     useful fraction per page, estimate time-per-useful-byte and recommend a
     page size.  (Benchmarks sweep real page sizes; the advisor documents the
     reasoning and provides a starting point.)
+
+Static-hint vs. online-classifier precedence (DESIGN.md §8): a region that
+received explicit advice — ``readahead_pages=`` at construction or
+:meth:`UMapRegion.advise` at runtime — is *hint-pinned* and the adaptive
+classifier never retunes it.  The classifier only drives regions that gave
+no hint.  Application knowledge outranks inference, always.
 """
 
 from __future__ import annotations
@@ -25,14 +35,24 @@ import math
 from typing import Iterable, List, Sequence
 
 from .config import UMapConfig
+from .pattern import Phase
 
 
 class AccessAdvice(enum.Enum):
+    """madvise-style per-region access declarations (paper §3.6).
+
+    Each member maps (via :data:`ADVICE_SETTINGS`) to a concrete
+    ``(read_ahead, eviction_policy)`` pair; :func:`apply_advice` bakes it
+    into a config, :meth:`UMapRegion.advise` applies it to a live region and
+    pins it against the online classifier.
+    """
+
     NORMAL = "normal"
     SEQUENTIAL = "sequential"   # deep readahead, forward-moving eviction
     RANDOM = "random"           # no readahead, LRU
     WILLNEED = "willneed"       # caller will prefetch explicitly
     STREAMING = "streaming"     # sequential + evict-behind (no reuse)
+    STRIDED = "strided"         # constant non-unit stride (classifier bridge)
 
 
 ADVICE_SETTINGS = {
@@ -41,11 +61,53 @@ ADVICE_SETTINGS = {
     AccessAdvice.RANDOM: dict(read_ahead=0, eviction_policy="lru"),
     AccessAdvice.WILLNEED: dict(read_ahead=0, eviction_policy="lru"),
     AccessAdvice.STREAMING: dict(read_ahead=16, eviction_policy="swa"),
+    AccessAdvice.STRIDED: dict(read_ahead=4, eviction_policy="lru"),
 }
 
 
 def apply_advice(config: UMapConfig, advice: AccessAdvice) -> UMapConfig:
+    """Bake an advice's settings into a config (the paper's static path)."""
     return config.replace(**ADVICE_SETTINGS[advice])
+
+
+# ------------------------------------------------- classifier <-> advice bridge
+
+#: Online phase -> nearest static advice.  SCAN_REUSE maps to STREAMING:
+#: both want deep readahead plus evict-lowest (for a cyclic scan larger than
+#: the buffer, evicting the lowest page approximates Belady — the page just
+#: read is the one whose reuse is furthest away).
+_PHASE_TO_ADVICE = {
+    Phase.WARMUP: AccessAdvice.NORMAL,
+    Phase.SEQUENTIAL: AccessAdvice.SEQUENTIAL,
+    Phase.STRIDED: AccessAdvice.STRIDED,
+    Phase.RANDOM: AccessAdvice.RANDOM,
+    Phase.SCAN_REUSE: AccessAdvice.STREAMING,
+}
+
+_ADVICE_TO_PHASE = {
+    AccessAdvice.NORMAL: Phase.WARMUP,
+    AccessAdvice.SEQUENTIAL: Phase.SEQUENTIAL,
+    AccessAdvice.RANDOM: Phase.RANDOM,
+    AccessAdvice.WILLNEED: Phase.RANDOM,
+    AccessAdvice.STREAMING: Phase.SCAN_REUSE,
+    AccessAdvice.STRIDED: Phase.STRIDED,
+}
+
+
+def advice_for_phase(phase: Phase) -> AccessAdvice:
+    """Translate a detected :class:`~repro.core.pattern.Phase` into the
+    static advice vocabulary — what the classifier *would have advised* had
+    the application known its pattern up front.  Used for telemetry and for
+    feeding classifier output back through advice-driven code paths."""
+    return _PHASE_TO_ADVICE[phase]
+
+
+def phase_for_advice(advice: AccessAdvice) -> Phase:
+    """Inverse bridge: the phase a static advice asserts the region is in.
+
+    WILLNEED maps to RANDOM (the caller prefetches explicitly, so the pager
+    should neither read ahead nor infer); NORMAL maps to WARMUP (no claim)."""
+    return _ADVICE_TO_PHASE[advice]
 
 
 def plan_prefetch(

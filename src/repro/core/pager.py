@@ -18,9 +18,25 @@ Structure (mirrors Figure 1 of the paper):
 I/O always happens *outside* the metadata lock, so fillers genuinely overlap
 on stores whose reads release the GIL (file I/O, remote-latency sleeps).
 
+Two engine extensions beyond the paper's static design (DESIGN.md §8–9):
+
+  * **Adaptive retuning** — with ``config.adaptive``, every non-hint-pinned
+    region gets an online access-pattern classifier (pattern.py) fed by the
+    demand-fault stream; confirmed phase transitions retune the region's
+    readahead (stride-aware) and the service's eviction policy mid-run.
+    Static hints (explicit ``readahead_pages=`` or ``region.advise``) always
+    take precedence — the classifier never touches pinned regions.
+  * **Fault coalescing** — fillers drain runs of *adjacent* pending pages
+    from the queue and resolve them with one batched store read
+    (``BackingStore.read_into_batch``): one latency charge / syscall per
+    run, all pages installed atomically under a single lock acquisition,
+    every blocked faulting thread woken.  ``config.max_batch_pages=1``
+    disables it.
+
 The ``mmap_compat`` configuration freezes this machinery to kernel-mmap
 semantics (synchronous resolution on the faulting thread, heuristic
-readahead, 10%-dirty flush) and is the paper's comparison baseline.
+readahead, 10%-dirty flush, no coalescing, no adaptation) and is the
+paper's comparison baseline.
 """
 
 from __future__ import annotations
@@ -33,6 +49,7 @@ from typing import Dict, List, Optional, TYPE_CHECKING
 from .buffer import PageBuffer, make_policy
 from .config import UMapConfig
 from .pagetable import PageEntry, PageKey, PageState, PageTable
+from .pattern import AccessPatternClassifier
 from .watermark import WatermarkMonitor
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -50,6 +67,9 @@ class ServiceStats:
     writebacks: int = 0
     watermark_flushes: int = 0
     fill_queue_peak: int = 0
+    coalesced_fills: int = 0        # batched fill operations (>= 2 pages each)
+    coalesced_pages: int = 0        # pages installed via batched fills
+    pattern_transitions: int = 0    # classifier-driven retunes applied
     per_filler_fills: Dict[int, int] = field(default_factory=dict)
 
     def snapshot(self) -> dict:
@@ -81,6 +101,7 @@ class PagingService:
         self.policy = make_policy(config.eviction_policy)
         self.stats = ServiceStats()
         self._regions: Dict[int, "UMapRegion"] = {}
+        self._classifiers: Dict[int, AccessPatternClassifier] = {}
         self._next_region_id = 0
         self._closed = False
 
@@ -119,12 +140,21 @@ class PagingService:
             rid = self._next_region_id
             self._next_region_id += 1
             self._regions[rid] = region
+            if (self.config.adaptive and not self.config.mmap_compat
+                    and not getattr(region, "hint_pinned", False)):
+                self._classifiers[rid] = AccessPatternClassifier(
+                    window=self.config.pattern_window,
+                    min_samples=self.config.pattern_min_samples,
+                    interval=self.config.pattern_interval,
+                    hysteresis=self.config.pattern_hysteresis,
+                )
             return rid
 
     def unregister(self, region: "UMapRegion") -> None:
         self.flush_region(region, evict=True)
         with self.lock:
             self._regions.pop(region.region_id, None)
+            self._classifiers.pop(region.region_id, None)
 
     def close(self) -> None:
         if self._closed:
@@ -166,6 +196,8 @@ class PagingService:
                        if demand and region.readahead_pages > 0 else [])
         for e in to_fill + ra_fill:
             self._dispatch_fill(region, e)
+        if demand and to_fill:
+            self._observe_faults(region, [e.key[1] for e in to_fill])
 
     def acquire_one(self, region: "UMapRegion", page_no: int) -> PageEntry:
         """Pin one page, faulting it in if needed (userfaultfd-style block).
@@ -199,6 +231,7 @@ class PagingService:
                     waitee = e
             if dispatch is not None:
                 self._dispatch_fill(region, dispatch)
+                self._observe_faults(region, [page_no])
             waitee.event.wait(timeout=0.05)
             first_attempt = False
 
@@ -219,6 +252,60 @@ class PagingService:
             self.table.mark_dirty(entry)
         self.watermark.poke()
 
+    # ------------------------------------------- adaptive engine (DESIGN.md §8)
+
+    def _observe_faults(self, region: "UMapRegion", page_nos: List[int]) -> None:
+        """Feed demand-fault page numbers to the region's classifier.
+
+        No-op unless ``config.adaptive`` and the region is not hint-pinned.
+        Called outside the metadata lock (the classifier has its own); a
+        confirmed phase transition retunes the region immediately.
+        """
+        clf = self._classifiers.get(region.region_id)
+        if clf is None or region.hint_pinned:
+            return
+        decision = None
+        for pno in page_nos:
+            d = clf.observe(pno)
+            if d is not None:
+                decision = d
+        if decision is not None:
+            self._apply_decision(region, decision)
+
+    def _apply_decision(self, region: "UMapRegion", decision) -> None:
+        """Retune a region from a confirmed classifier decision.
+
+        Re-checks pinning under the lock: advise() may have pinned the
+        region while this decision was in flight, and static hints must win
+        even against a decision already computed.
+        """
+        with self.lock:
+            if region.hint_pinned:
+                return
+            region.readahead_pages = decision.read_ahead
+            region.detected_stride = decision.stride
+            self.stats.pattern_transitions += 1
+        self.set_eviction_policy(decision.eviction_policy)
+
+    def set_eviction_policy(self, name: str) -> None:
+        """Swap the eviction policy at runtime (adaptive engine / app call).
+
+        The fresh policy adopts all currently-resident pages; recency
+        history is intentionally dropped (the swap happens because the
+        access pattern changed — see ``EvictionPolicy.adopt``).
+        """
+        with self.lock:
+            if name == self.policy.name:
+                return
+            new_policy = make_policy(name)
+            new_policy.adopt(self.table.resident_keys())
+            self.policy = new_policy
+
+    def pattern_snapshot(self, region_id: int) -> Optional[dict]:
+        """Telemetry: the classifier's current phase for one region."""
+        clf = self._classifiers.get(region_id)
+        return None if clf is None else clf.snapshot()
+
     # ------------------------------------------------------ prefetch (§3.6)
 
     def prefetch(self, region: "UMapRegion", page_nos: List[int]) -> int:
@@ -237,15 +324,23 @@ class PagingService:
         return len(to_fill)
 
     def _post_readahead(self, region: "UMapRegion", faulted: List[int]) -> List[PageEntry]:
-        """Fixed-window readahead past demand faults (UMAP_READ_AHEAD).
+        """Window readahead past demand faults (UMAP_READ_AHEAD).
 
-        Called under the lock; returns the new entries for the caller to
-        dispatch outside the lock.
+        Stride-aware: when the adaptive classifier detected a non-unit
+        stride, the window is posted *along that stride* (pages ``base +
+        k*stride``) — prefetch a static advice vocabulary cannot express.
+        Negative strides (backward scans) read ahead *downward* from the
+        lowest faulted page.  Called under the lock; returns the new entries
+        for the caller to dispatch outside the lock.
         """
-        last = max(faulted)
         npages = region.num_pages
+        stride = getattr(region, "detected_stride", 1) or 1
+        base = min(faulted) if stride < 0 else max(faulted)
         out: List[PageEntry] = []
-        for pno in range(last + 1, min(last + 1 + region.readahead_pages, npages)):
+        for k in range(1, region.readahead_pages + 1):
+            pno = base + k * stride
+            if not (0 <= pno < npages):
+                break
             key = (region.region_id, pno)
             if self.table.get(key) is None:
                 e = self.table.insert_filling(key)
@@ -265,13 +360,127 @@ class PagingService:
             work = self._fill_q.get()
             if work is _SHUTDOWN:
                 return
+            batch = self._coalesce(work)
             try:
-                self._do_fill(work.region, work.entry, worker_id)
+                if len(batch) == 1:
+                    self._do_fill(work.region, work.entry, worker_id)
+                else:
+                    self._do_fill_batch(work.region, batch, worker_id)
             except Exception:  # pragma: no cover - keep the pool alive
                 import traceback
                 traceback.print_exc()
                 with self.lock:
-                    work.entry.event.set()
+                    for e in batch:
+                        e.event.set()
+
+    # ------------------------------------------ fault coalescing (DESIGN.md §9)
+
+    def _coalesce(self, work: _FillWork) -> List[PageEntry]:
+        """Drain pending fills adjacent to ``work`` into one batch.
+
+        Pops queued work non-blocking, keeps the maximal run of pages
+        consecutive with the seed (same region, capped at
+        ``min(config.max_batch_pages, store.batch_read_hint)``), and requeues
+        everything else.  Returns the run sorted by page number (always
+        containing the seed entry).
+        """
+        region = work.region
+        limit = min(self.config.max_batch_pages,
+                    getattr(region.store, "batch_read_hint", 1))
+        if limit <= 1 or region.fill_callback is not None:
+            return [work.entry]
+        drained: List[object] = []
+        try:
+            while len(drained) < 4 * limit:
+                drained.append(self._fill_q.get_nowait())
+        except queue.Empty:
+            pass
+        by_pno: Dict[int, _FillWork] = {}
+        leftover: List[object] = []
+        for w in drained:
+            if w is not _SHUTDOWN and w.region is region:
+                by_pno[w.entry.key[1]] = w
+            else:
+                leftover.append(w)
+        seed = work.entry.key[1]
+        run = [work.entry]
+        p = seed + 1
+        while p in by_pno and len(run) < limit:
+            run.append(by_pno.pop(p).entry)
+            p += 1
+        back: List[PageEntry] = []
+        p = seed - 1
+        while p in by_pno and len(run) + len(back) < limit:
+            back.append(by_pno.pop(p).entry)
+            p -= 1
+        for w in by_pno.values():
+            leftover.append(w)
+        for w in leftover:
+            self._fill_q.put(w)
+        return list(reversed(back)) + run
+
+    def _do_fill_batch(self, region: "UMapRegion", entries: List[PageEntry],
+                       worker_id: int) -> None:
+        """Resolve a run of adjacent pages with ONE batched store read.
+
+        Slot allocation never *waits* while the batch holds un-installed
+        slots (only opportunistic eviction) — entries that cannot get a slot
+        immediately are requeued as single fills, preserving the pager's
+        deadlock-freedom argument.  All acquired pages are installed
+        atomically under one lock acquisition, waking every blocked faulting
+        thread at once (batched UFFDIO_COPY semantics).
+        """
+        # First slot may block (the filler holds nothing yet) — same
+        # guarantee as the single-fill path.
+        slots = [self._alloc_slot_evicting(entries[0].key)]
+        taken = 1
+        for e in entries[1:]:
+            slot = self._try_alloc_slot(e.key)
+            if slot is None:
+                break
+            slots.append(slot)
+            taken += 1
+        requeued = entries[taken:]
+        entries = entries[:taken]
+        for e in requeued:                  # memory pressure: retry singly
+            self._submit_fill(region, e)
+
+        bufs = [
+            self.buffer.slot_view(slot, region.page_nbytes(e.key[1]))
+            for e, slot in zip(entries, slots)
+        ]
+        # ONE store call for the whole run — I/O outside the lock.
+        region.store.read_into_batch(entries[0].key[1] * region.page_size, bufs)
+        with self.lock:
+            for e, slot in zip(entries, slots):
+                self.table.install(e, slot)
+                self.policy.on_install(e.key)
+                if e.prefetched:
+                    self.stats.prefetch_fills += 1
+            if len(entries) > 1:
+                self.stats.coalesced_fills += 1
+                self.stats.coalesced_pages += len(entries)
+            if worker_id >= 0:
+                pf = self.stats.per_filler_fills
+                pf[worker_id] = pf.get(worker_id, 0) + len(entries)
+            self.cond.notify_all()
+
+    def _try_alloc_slot(self, key: PageKey) -> Optional[int]:
+        """Non-blocking slot allocation: evict opportunistically, never wait."""
+        while True:
+            victim: Optional[PageEntry] = None
+            with self.lock:
+                slot = self.buffer.try_alloc(key)
+                if slot is not None:
+                    return slot
+                victims = self.policy.pick_victims(1, self._evictable_key)
+                if not victims:
+                    return None
+                victim = self.table.get(victims[0])
+                victim.state = PageState.EVICTING
+                victim.event.clear()
+                self.policy.on_remove(victim.key)
+            self._evict_now(victim)
 
     def _do_fill(self, region: "UMapRegion", entry: PageEntry, worker_id: int) -> None:
         if self._mmap_sem is not None:

@@ -15,13 +15,16 @@ serving all regions, §3.3) or construct a private one from a config.
 from __future__ import annotations
 
 import threading
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, TYPE_CHECKING
 
 import numpy as np
 
 from .config import UMapConfig
 from .pager import PagingService
 from .store import BackingStore
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .hints import AccessAdvice
 
 
 class UMapRegion:
@@ -47,6 +50,13 @@ class UMapRegion:
         self.fill_callback = fill_callback or cfg.fill_callback
         self.name = name
         self.num_pages = -(-store.size // self.page_size)
+        # Static-hint precedence (DESIGN.md §8): an explicit readahead_pages
+        # argument pins this region — the adaptive classifier never retunes
+        # pinned regions.  advise() pins at runtime.  Must be set before
+        # register(), which decides whether to attach a classifier.
+        self.hint_pinned = readahead_pages is not None
+        self.advice: Optional["AccessAdvice"] = None
+        self.detected_stride = 1   # classifier-detected fault stride
         self.region_id = service.register(self)
         self._closed = False
         # mmap-compat heuristic readahead state (sequential-streak detector)
@@ -123,6 +133,23 @@ class UMapRegion:
             pos += hi - lo
 
     # ------------------------------------------------------------- hints
+
+    def advise(self, advice: "AccessAdvice") -> None:
+        """Declare this region's access pattern (madvise analogue, §3.6).
+
+        Applies the advice's readahead immediately, swaps the service's
+        eviction policy (service-wide — regions sharing a service share a
+        buffer and hence a policy, §3.3), and *pins* the region: the online
+        classifier will never override an explicit hint (DESIGN.md §8).
+        """
+        from .hints import ADVICE_SETTINGS  # local import: hints imports config
+        settings = ADVICE_SETTINGS[advice]
+        with self.service.lock:   # exclude an in-flight classifier decision
+            self.advice = advice
+            self.hint_pinned = True
+            self.readahead_pages = settings["read_ahead"]
+            self.detected_stride = 1
+        self.service.set_eviction_policy(settings["eviction_policy"])
 
     def prefetch(self, offset: int, nbytes: int) -> int:
         return self.prefetch_pages(self._page_range(offset, nbytes))

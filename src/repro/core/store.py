@@ -34,8 +34,34 @@ from typing import Callable, List, Sequence, Tuple
 import numpy as np
 
 
+def _slice_bufs(bufs: Sequence[np.ndarray], start: int, length: int) -> List[np.ndarray]:
+    """Slices of the logical concatenation of ``bufs`` covering
+    ``[start, start + length)`` — the scatter list for a sub-range of a
+    batched read."""
+    out: List[np.ndarray] = []
+    pos = 0
+    end = start + length
+    for b in bufs:
+        nb = b.nbytes
+        lo, hi = max(start, pos), min(end, pos + nb)
+        if lo < hi:
+            mv = b.view(np.uint8)
+            out.append(mv[lo - pos : hi - pos])
+        pos += nb
+        if pos >= end:
+            break
+    return out
+
+
 class BackingStore(abc.ABC):
     """Flat byte space with positioned read/write."""
+
+    #: Upper bound on how many adjacent pages a coalesced fill is worth
+    #: batching for this store (per-store default; the pager caps batches at
+    #: ``min(config.max_batch_pages, store.batch_read_hint)``).  High-latency
+    #: stores want deep batches (one latency charge amortized over the run);
+    #: in-memory stores gain little beyond queue/wakeup amortization.
+    batch_read_hint: int = 8
 
     @property
     @abc.abstractmethod
@@ -52,6 +78,25 @@ class BackingStore(abc.ABC):
     @abc.abstractmethod
     def write_from(self, offset: int, buf: np.ndarray) -> int:
         """Write ``len(buf)`` bytes from ``buf`` at ``offset``."""
+
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Read consecutive byte ranges starting at ``offset`` into each buf.
+
+        ``bufs[0]`` receives bytes ``[offset, offset + bufs[0].nbytes)``,
+        ``bufs[1]`` the next ``bufs[1].nbytes`` bytes, and so on — the
+        scatter target for a coalesced run of adjacent pages (DESIGN.md §9).
+
+        Default implementation loops :meth:`read_into` (one store operation
+        per buf, so ``num_reads`` counts each); stores that can do better
+        override it to issue a *single* operation — one syscall
+        (``preadv``), one latency charge, one generator invocation — and
+        count one read.  Returns total bytes read.
+        """
+        got, pos = 0, offset
+        for b in bufs:
+            got += self.read_into(pos, b)
+            pos += b.nbytes
+        return got
 
     def flush(self) -> None:  # pragma: no cover - default no-op
         pass
@@ -81,6 +126,8 @@ class BackingStore(abc.ABC):
 class FileStore(BackingStore):
     """Single-file store using positioned I/O on a raw fd."""
 
+    batch_read_hint = 32     # one preadv amortizes a syscall per page
+
     def __init__(self, path: str, size: int | None = None, create: bool = False):
         self.path = str(path)
         flags = os.O_RDWR | (os.O_CREAT if create else 0)
@@ -106,6 +153,30 @@ class FileStore(BackingStore):
             got += len(chunk)
         if got < want:
             mv[got:] = b"\x00" * (want - got)
+        self._count_read(got)
+        return got
+
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one ``preadv`` scatter-read for the whole run."""
+        mvs = [memoryview(b).cast("B") for b in bufs]
+        want = sum(m.nbytes for m in mvs)
+        got = 0
+        while got < want:
+            # re-slice the iovec list past the bytes already read
+            pending, skip = [], got
+            for m in mvs:
+                if skip >= m.nbytes:
+                    skip -= m.nbytes
+                    continue
+                pending.append(m[skip:] if skip else m)
+                skip = 0
+            n = os.preadv(self._fd, pending, offset + got)
+            if n <= 0:
+                break  # EOF — zero-fill the tail
+            got += n
+        if got < want:
+            for m in _slice_bufs(bufs, got, want - got):
+                m[:] = 0
         self._count_read(got)
         return got
 
@@ -168,6 +239,17 @@ class MultiFileStore(BackingStore):
         self._count_read(got)
         return got
 
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one extent walk for the whole run; each overlapping
+        extent receives a single (itself batched) member-store read instead
+        of one call per page."""
+        total = sum(b.nbytes for b in bufs)
+        got = 0
+        for store, s_off, b_off, n in self._segments(offset, total):
+            got += store.read_into_batch(s_off, _slice_bufs(bufs, b_off, n))
+        self._count_read(got)
+        return got
+
     def write_from(self, offset: int, buf: np.ndarray) -> int:
         mv = buf.view(np.uint8)
         done = 0
@@ -206,6 +288,20 @@ class HostArrayStore(BackingStore):
         self._count_read(n)
         return n
 
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one pass over the array, counted as one read."""
+        got, pos = 0, offset
+        for b in bufs:
+            mv = b.view(np.uint8)
+            n = max(0, min(mv.nbytes, self._data.nbytes - pos))
+            mv[:n] = self._data[pos : pos + n]
+            if n < mv.nbytes:
+                mv[n:] = 0
+            got += n
+            pos += mv.nbytes
+        self._count_read(got)
+        return got
+
     def write_from(self, offset: int, buf: np.ndarray) -> int:
         mv = buf.view(np.uint8)
         n = max(0, min(mv.nbytes, self._data.nbytes - offset))
@@ -224,6 +320,8 @@ class RemoteStore(BackingStore):
     paper's I/O decoupling (§3.2) exploits.
     """
 
+    batch_read_hint = 64     # deep batches: one latency charge per run
+
     def __init__(self, inner: BackingStore, latency_s: float = 5e-3,
                  bandwidth_Bps: float = 200e6):
         self.inner = inner
@@ -241,6 +339,15 @@ class RemoteStore(BackingStore):
     def read_into(self, offset: int, buf: np.ndarray) -> int:
         self._delay(buf.nbytes)
         n = self.inner.read_into(offset, buf)
+        self._count_read(n)
+        return n
+
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: the whole run pays ONE round-trip latency charge plus
+        streaming bandwidth — precisely the coalescing win the paper's I/O
+        decoupling argument (§3.3) predicts for high-latency tiers."""
+        self._delay(sum(b.nbytes for b in bufs))
+        n = self.inner.read_into_batch(offset, bufs)
         self._count_read(n)
         return n
 
@@ -264,6 +371,8 @@ class SyntheticStore(BackingStore):
     (writes go to an overlay dict at page granularity).
     """
 
+    batch_read_hint = 32     # one generator invocation per run
+
     def __init__(self, size: int, generator: Callable[[int, np.ndarray], None],
                  overlay_page: int = 1 << 20):
         self._size = size
@@ -277,10 +386,8 @@ class SyntheticStore(BackingStore):
     def size(self) -> int:
         return self._size
 
-    def read_into(self, offset: int, buf: np.ndarray) -> int:
-        mv = buf.view(np.uint8)
-        self._gen(offset, mv)
-        # apply any overlayed (written) ranges
+    def _overlay_onto(self, offset: int, mv: np.ndarray) -> None:
+        """Apply any overlayed (written) ranges onto generated bytes."""
         p = self._overlay_page
         first, last = offset // p, (offset + mv.nbytes - 1) // p
         with self._lock:
@@ -291,8 +398,28 @@ class SyntheticStore(BackingStore):
                 lo = max(offset, pg * p)
                 hi = min(offset + mv.nbytes, (pg + 1) * p)
                 mv[lo - offset : hi - offset] = od[lo - pg * p : hi - pg * p]
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        mv = buf.view(np.uint8)
+        self._gen(offset, mv)
+        self._overlay_onto(offset, mv)
         self._count_read(mv.nbytes)
         return mv.nbytes
+
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one generator call over the whole contiguous run,
+        one overlay pass, then scatter into the page bufs."""
+        total = sum(b.nbytes for b in bufs)
+        scratch = np.empty(total, np.uint8)
+        self._gen(offset, scratch)
+        self._overlay_onto(offset, scratch)
+        pos = 0
+        for b in bufs:
+            mv = b.view(np.uint8)
+            mv[:] = scratch[pos : pos + mv.nbytes]
+            pos += mv.nbytes
+        self._count_read(total)
+        return total
 
     def write_from(self, offset: int, buf: np.ndarray) -> int:
         mv = buf.view(np.uint8)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.pattern import AccessPatternClassifier, Phase
 from ..kernels.paged_attention.ops import paged_attention
 from .allocator import OutOfPages, PageAllocator
 
@@ -38,6 +39,13 @@ class PagedKVConfig:
     num_pages: int = 1024        # pool pages per layer (UMAP_BUFSIZE analogue)
     max_pages_per_seq: int = 128
     dtype: str = "bfloat16"
+    # --- adaptive engine opt-in (DESIGN.md §8) ------------------------------
+    # Per-sequence page-touch streams feed an online classifier; with an
+    # attention_window set, page-prefix eviction fires automatically once a
+    # sequence's phase is confirmed SEQUENTIAL (the streaming-decode case),
+    # instead of requiring the server to call evict_window_prefix by hand.
+    adaptive: bool = False
+    attention_window: Optional[int] = None   # tokens (sliding-window models)
 
     @property
     def page_bytes(self) -> int:
@@ -57,6 +65,11 @@ class PagedKVCache:
         self.v_pool = jnp.zeros(shape, dt)
         self.allocator = PageAllocator(cfg.num_pages)
         self.seq_len: Dict[int, int] = {}
+        # pages dropped off the front of each sequence by window eviction —
+        # logical page index = physical index into pages_of() + dropped
+        self.pages_dropped: Dict[int, int] = {}
+        self._classifiers: Dict[int, AccessPatternClassifier] = {}
+        self.auto_evicted_pages = 0
 
     # ------------------------------------------------------------- sequences
 
@@ -83,31 +96,77 @@ class PagedKVCache:
         ps = self.cfg.page_size
         if pos % ps == 0:
             self.allocator.alloc(seq_id, 1)
-        page = self.allocator.pages_of(seq_id)[pos // ps]
+        page = self.allocator.pages_of(seq_id)[
+            pos // ps - self.pages_dropped.get(seq_id, 0)]
         slot = pos % ps
         self.k_pool = self.k_pool.at[:, page, slot].set(k.astype(self.k_pool.dtype))
         self.v_pool = self.v_pool.at[:, page, slot].set(v.astype(self.v_pool.dtype))
         self.seq_len[seq_id] = pos + 1
+        if pos % ps == 0:               # observe at page granularity
+            self._observe(seq_id, pos // ps)
+
+    def _observe(self, seq_id: int, page_idx: int) -> None:
+        """Adaptive opt-in: feed the sequence's page-touch stream (DESIGN.md §8).
+
+        A confirmed SEQUENTIAL phase on a sliding-window model triggers
+        automatic prefix eviction — the classifier standing in for an
+        explicit STREAMING advice from the serving layer.
+        """
+        if not self.cfg.adaptive:
+            return
+        clf = self._classifiers.get(seq_id)
+        if clf is None:
+            clf = self._classifiers[seq_id] = AccessPatternClassifier(
+                window=16, min_samples=4, interval=2, hysteresis=2)
+        clf.observe(page_idx)
+        # once the phase is confirmed SEQUENTIAL, keep the prefix trimmed as
+        # the sequence advances (evict_window_prefix is a no-op when nothing
+        # is fully behind the window)
+        if (self.cfg.attention_window is not None
+                and clf.phase is Phase.SEQUENTIAL):
+            self.auto_evicted_pages += len(
+                self.evict_window_prefix(seq_id, self.cfg.attention_window))
+
+    def detected_phase(self, seq_id: int) -> Optional[str]:
+        """Telemetry: the classifier's phase for one sequence (None if off)."""
+        clf = self._classifiers.get(seq_id)
+        return None if clf is None else clf.snapshot()["phase"]
 
     def release(self, seq_id: int) -> int:
         self.seq_len.pop(seq_id, None)
+        self.pages_dropped.pop(seq_id, None)
+        self._classifiers.pop(seq_id, None)
         return self.allocator.free_seq(seq_id)
 
     def evict_window_prefix(self, seq_id: int, window: int) -> List[int]:
         """Sliding-window policy: free pages fully behind the window."""
         ps = self.cfg.page_size
         keep_from = max(0, self.seq_len.get(seq_id, 0) - window)
-        evictable = keep_from // ps
-        already = len(self.allocator.pages_of(seq_id)) - (
-            -(-self.seq_len.get(seq_id, 0) // ps))
-        del already
-        return self.allocator.free_prefix(seq_id, evictable) if evictable else []
+        dropped = self.pages_dropped.get(seq_id, 0)
+        evictable = keep_from // ps - dropped
+        if evictable <= 0:
+            return []
+        freed = self.allocator.free_prefix(seq_id, evictable)
+        self.pages_dropped[seq_id] = dropped + len(freed)
+        return freed
 
     # ------------------------------------------------------------- attention
 
     def batch_tables(self, seq_ids: List[int]) -> Tuple[jax.Array, jax.Array]:
-        rows = [self.allocator.table_for(s, self.cfg.max_pages_per_seq)
-                for s in seq_ids]
+        """Page-table rows keyed by *logical* page index: token ``t`` of a
+        sequence always resolves through ``row[t // page_size]``, so rows of
+        window-evicted sequences lead with ``pages_dropped`` fill entries.
+        (Positions behind the attention window resolve to the fill page;
+        window kernels mask them, and full-causal kernels must not be used
+        on prefix-evicted sequences.)"""
+        mp = self.cfg.max_pages_per_seq
+        rows = []
+        for s in seq_ids:
+            d = self.pages_dropped.get(s, 0)
+            pages = self.allocator.pages_of(s)
+            row = np.zeros(mp, np.int32)
+            row[d : d + len(pages)] = pages[: max(0, mp - d)]
+            rows.append(row)
         lengths = [self.seq_len.get(s, 0) for s in seq_ids]
         return (jnp.asarray(np.stack(rows), jnp.int32),
                 jnp.asarray(lengths, jnp.int32))
@@ -128,6 +187,9 @@ class PagedKVCache:
             "occupancy": self.allocator.occupancy(),
             "page_bytes": self.cfg.page_bytes,
             "sequences": len(self.seq_len),
+            "auto_evicted_pages": self.auto_evicted_pages,
+            "phases": {s: c.snapshot()["phase"]
+                       for s, c in self._classifiers.items()},
         }
 
 

@@ -153,7 +153,14 @@ def _moe_forward_shard_local(p: dict, x: jax.Array, top_k: int,
     shard-count-sized traffic instead of GSPMD's replicate+all-reduce.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # older jax: pre-promotion location + check_rep kwarg
+        from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+            return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_rep=check_vma)
 
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     b, s, d = x.shape
@@ -191,7 +198,7 @@ def _moe_forward_shard_local(p: dict, x: jax.Array, top_k: int,
         b_l, s_l, _ = x_l.shape
         T_full = b_l * s_l
         E = router.shape[1]
-        n_model = jax.lax.axis_size("model")
+        n_model = mesh.shape["model"]   # static size (jax.lax.axis_size is newer-jax only)
         e_local = E // n_model
         x_full = x_l.reshape(T_full, d)
         # x is replicated over "model": each model peer must dispatch a

@@ -7,6 +7,13 @@ known (layer i+1 follows layer i), so the pager is purely anticipatory:
 ``readahead`` layers are always in flight — the paper's §2 adaptation
 (reactive faults -> anticipatory fills, DESIGN.md §2).
 
+With ``adaptive=True`` the pager opts into the online classifier
+(core/pattern.py, DESIGN.md §8): layer indices feed an
+AccessPatternClassifier, and the readahead depth follows the detected phase
+— deep for the usual forward sweep, zero when the request stream turns
+random (e.g. speculative-decode layer skipping) so slots are not wasted on
+layers that will not be used.
+
 Filler concurrency is real: transfers are issued by a worker thread through
 ``jax.device_put`` (async under JAX's dispatch), overlapping host->device
 copies with the consumer's compute.
@@ -21,12 +28,14 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from ..core.pattern import AccessPatternClassifier
+
 PyTree = Any
 
 
 class LayerWeightPager:
     def __init__(self, host_layers: List[PyTree], num_slots: int = 4,
-                 readahead: int = 2, device=None):
+                 readahead: int = 2, device=None, adaptive: bool = False):
         assert num_slots >= readahead + 1
         self.host_layers = host_layers
         self.num_layers = len(host_layers)
@@ -38,10 +47,14 @@ class LayerWeightPager:
         self._events: Dict[int, threading.Event] = {}
         self._lock = threading.Lock()
         self._q: "queue.Queue" = queue.Queue()
+        self._classifier = (AccessPatternClassifier(
+            window=16, min_samples=4, interval=2, hysteresis=2)
+            if adaptive else None)
         self._filler = threading.Thread(target=self._fill_loop, daemon=True,
                                         name="weight-pager-filler")
         self._filler.start()
-        self.stats = {"fills": 0, "hits": 0, "waits": 0, "evictions": 0}
+        self.stats = {"fills": 0, "hits": 0, "waits": 0, "evictions": 0,
+                      "pattern_transitions": 0}
 
     # ------------------------------------------------------------- pager
 
@@ -77,6 +90,12 @@ class LayerWeightPager:
 
     def get(self, layer: int) -> PyTree:
         """Block until layer resident; issues readahead for the next layers."""
+        if self._classifier is not None:
+            d = self._classifier.observe(layer)
+            if d is not None:
+                # clamp to the slot ring; slots must cover readahead + 1
+                self.readahead = max(0, min(self.num_slots - 1, d.read_ahead))
+                self.stats["pattern_transitions"] += 1
         for ahead in range(1, self.readahead + 1):
             self.prefetch(layer + ahead)
         with self._lock:

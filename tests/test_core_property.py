@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the paging core's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import (

@@ -4,6 +4,7 @@ paged-vs-contiguous model parity, loss chunking invariance."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 import repro.models as M
 from repro.configs.registry import get_smoke_config
@@ -111,6 +112,7 @@ def test_chunked_xent_invariant_to_chunk_size():
 def test_moe_dispatch_invariants_property():
     """Capacity respected; each kept assignment contributes exactly once;
     unrouted experts produce zero-padded slots (hypothesis over shapes/keys)."""
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.models.moe import _moe_forward_dense, moe_param_specs
     from repro.models.common import init_param_tree
