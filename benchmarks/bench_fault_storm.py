@@ -1,0 +1,165 @@
+"""Multi-threaded fault-storm benchmark: shard-count scaling (§3.3).
+
+The paper's scalability claim is that user-space fault handling scales with
+multi-threaded handlers; the sharded pager (DESIGN.md §12) makes the
+metadata side of that claim measurable.  N application threads post batches
+of random-page faults over a :class:`SyntheticStore`-backed region far
+larger than the buffer (so ~every post is a miss and ~every fill also
+evicts), and the harness times how fast the filler pool drains them —
+*fill throughput*, isolated from reader sleep/wake scheduling noise.  The
+same storm runs at ``shards=1`` (the seed's global-lock geometry, reached
+through the identical code path) and at higher stripe counts; the steal and
+per-shard contention counters in the JSON output show *why* the ratio moves.
+
+The store generator is near-free on purpose: the storm measures metadata
+scalability (stripe locks, slot pools, eviction state), not store bandwidth
+— DESIGN.md §11.2's shape-not-absolute rule applies.
+
+Run standalone (``python -m benchmarks.bench_fault_storm [--smoke|--full]``)
+or via ``python -m benchmarks.run --only fault_storm``.  Rows land in
+``experiments/bench/fault_storm.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _gen(offset: int, buf: np.ndarray) -> None:
+    buf[:] = (offset >> 12) & 0xFF
+
+
+def _storm_once(shards: int, threads: int, npages: int, page_size: int,
+                slots: int, fillers: int):
+    from repro.core import SyntheticStore, UMapConfig, umap, uunmap
+
+    store = SyntheticStore(npages * page_size, _gen)
+    cfg = UMapConfig(page_size=page_size, buffer_size=slots * page_size,
+                     num_fillers=fillers, num_evictors=2, shards=shards,
+                     max_batch_pages=1)   # per-page metadata work, no batching
+    region = umap(store, config=cfg)
+    svc = region.service
+    posted = [0] * threads
+    barrier = threading.Barrier(threads + 1)
+    # Disjoint per-thread page sets, randomly ordered: every post inserts
+    # (no duplicate-skip noise), so pages_filled is identical across shard
+    # configurations and throughput is apples-to-apples.  Faults are posted
+    # one page at a time — a fault *is* a single-page event; batched posting
+    # would amortize the very per-event metadata cost under test.
+    quota = npages // threads
+
+    def worker(tid: int) -> None:
+        rng = np.random.default_rng(100 + tid)
+        own = [int(p) for p in
+               rng.permutation(np.arange(tid * quota, (tid + 1) * quota))]
+        barrier.wait()
+        n = 0
+        for p in own:
+            n += region.prefetch_pages([p])
+        posted[tid] = n
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
+    [t.start() for t in ts]
+    barrier.wait()
+    t0 = time.perf_counter()
+    [t.join() for t in ts]
+    total = sum(posted)
+    deadline = time.time() + 120.0
+    while (sum(svc.stats.per_filler_fills.values()) < total
+           and time.time() < deadline):
+        time.sleep(0.002)
+    dt = time.perf_counter() - t0
+    st = region.stats()
+    uunmap(region)
+    return dt, total, st
+
+
+def run(quick: bool = True) -> List:
+    from .common import Row
+
+    threads = 8
+    if quick:
+        shard_counts = (1, 2, 8)
+        npages = 16384
+        reps = 5
+    else:
+        shard_counts = (1, 2, 4, 8, 16)
+        npages = 32768
+        reps = 5
+    page_size, slots, fillers = 4096, 512, 8
+
+    # Interleaved, paired reps: configs run back-to-back within each rep so
+    # slow machine drift cancels in the per-rep ratios, and the median
+    # absorbs stochastic lock-convoy formation (DESIGN.md §12.2).
+    runs: Dict[int, list] = {n: [] for n in shard_counts}
+    for _ in range(reps):
+        for n in shard_counts:
+            runs[n].append(
+                _storm_once(shards=n, threads=threads, npages=npages,
+                            page_size=page_size, slots=slots,
+                            fillers=fillers))
+
+    def med(lst, key):
+        s = sorted(lst, key=key)
+        return s[len(s) // 2]
+
+    rows: List[Row] = []
+    fills_per_s = {}
+    ratios = {}
+    for n in shard_counts:
+        dt, fills, st = med(runs[n], key=lambda r: r[1] / r[0])
+        fills_per_s[n] = fills / dt if dt else float("nan")
+        if n != 1:
+            per_rep = [
+                (runs[n][i][1] / runs[n][i][0])
+                / (runs[1][i][1] / runs[1][i][0])
+                for i in range(reps)
+            ]
+            ratios[n] = sorted(per_rep)[reps // 2]
+        rows.append(Row("fault_storm", f"shards{n}", page_size, dt, {
+            "threads": threads,
+            "pages_filled": fills,
+            "fills_per_s": round(fills_per_s[n], 1),
+            "steals": st["steals"],
+            "stolen_work": st["stolen_work"],
+            "lock_contended": st["lock_contended"],
+            "fill_stalls": st["fill_stalls"],
+            "evictions": st["evictions"],
+            "per_shard_contention": [s["lock_contended"]
+                                     for s in st["per_shard"]],
+            "per_shard_faults": [s["demand_faults"] + s["prefetch_fills"]
+                                 for s in st["per_shard"]],
+        }))
+    hi = max(n for n in shard_counts if n > 1)
+    rows.append(Row("fault_storm", "summary", page_size, 0.0, {
+        "threads": threads,
+        "speedup_shards_vs_1": {n: round(v, 2) for n, v in ratios.items()},
+        "best_speedup": round(ratios[hi], 2),
+    }))
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import print_rows, save_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="more shard points")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick storm, JSON artifact")
+    args = ap.parse_args(argv)
+    rows = run(quick=not args.full)
+    path = save_rows("fault_storm", rows)
+    print_rows(rows)
+    print(f"# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -7,6 +7,8 @@
   nstore      Fig 7/8 YCSB KV transactions + executor scaling
   paged_kv    (TPU transplant) KV page-size sweep, memory efficiency,
               weight-pager readahead
+  fault_storm §3.3    multi-threaded fault storm: shard-count scaling,
+              steal/contention counters (DESIGN.md §12)
   fault_overhead  µs/fault microbenchmark feeding the PageSizeAdvisor
 
 Prints ``name,us_per_call,derived`` CSV and writes JSON rows under
@@ -72,6 +74,7 @@ SUITES = {
     "asteroid": ("bench_asteroid", "Fig 5/6"),
     "nstore": ("bench_nstore", "Fig 7/8"),
     "paged_kv": ("bench_paged_kv", "TPU transplant"),
+    "fault_storm": ("bench_fault_storm", "§3.3 scaling"),
 }
 
 
@@ -100,12 +103,19 @@ def main(argv=None) -> int:
                 derived = ";".join(f"{k}={v}" for k, v in r.extra.items())
                 print(f"{r.workload}/{r.config}/p{r.page_size},{us:.0f},{derived}")
             tbl = speedup_table([r for r in rows if r.workload == name])
-            if tbl.get("mmap_seconds"):
+            mmap_s = tbl.get("mmap_seconds")
+            if mmap_s and mmap_s == mmap_s:      # present and not NaN
                 best = max((v["speedup_vs_mmap"]
                             for k, v in tbl.items() if isinstance(k, int)),
                            default=float("nan"))
                 print(f"# {name} ({fig}): best UMap speedup vs mmap = {best:.2f}x",
                       flush=True)
+            elif name == "fault_storm":          # scales vs shards=1 instead
+                summary = next((r for r in rows if r.config == "summary"), None)
+                if summary:
+                    print(f"# {name} ({fig}): fill-throughput speedup vs "
+                          f"shards=1 = {summary.extra['best_speedup']:.2f}x",
+                          flush=True)
         except Exception as e:  # noqa: BLE001
             all_ok = False
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)

@@ -30,7 +30,12 @@ from .hints import (  # noqa: F401
     phase_for_advice,
     plan_prefetch,
 )
-from .pagetable import PageEntry, PageState, PageTable  # noqa: F401
+from .pagetable import (  # noqa: F401
+    PageEntry,
+    PageState,
+    PageTable,
+    ShardedPageTableView,
+)
 from .pattern import (  # noqa: F401
     AccessPatternClassifier,
     Phase,

@@ -164,7 +164,17 @@ def make_policy(name: str) -> EvictionPolicy:
 
 
 class PageBuffer:
-    """``num_slots`` × ``slot_size`` bytes of pinned 'physical' memory."""
+    """``num_slots`` × ``slot_size`` bytes of pinned 'physical' memory.
+
+    The buffer owns only the memory and the slot→page ownership record.
+    *Free-list management lives in the paging service's shards* (DESIGN.md
+    §12): :meth:`partition` hands each shard a disjoint slot set, and shards
+    claim/release slots under their own locks, so slot allocation on
+    different shards never contends.  ``claim``/``release`` are single
+    GIL-atomic list-item writes; the occupancy queries below are lock-free
+    scans that may be momentarily stale while workers run — exact when the
+    service is quiescent, which is when tests and telemetry read them.
+    """
 
     def __init__(self, num_slots: int, slot_size: int):
         if num_slots < 1:
@@ -172,33 +182,39 @@ class PageBuffer:
         self.num_slots = num_slots
         self.slot_size = slot_size
         self._mem = np.zeros((num_slots, slot_size), dtype=np.uint8)
-        self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self._owner: List[Optional[PageKey]] = [None] * num_slots
 
-    # The service serializes alloc/free under its lock.
+    def partition(self, nshards: int) -> List[List[int]]:
+        """Disjoint round-robin slot sets, one per shard.
+
+        Striped (slot ``s`` goes to shard ``s % nshards``) so truncated
+        buffers spread evenly; every shard is non-empty when
+        ``nshards <= num_slots`` (the service clamps to guarantee it).
+        """
+        parts: List[List[int]] = [[] for _ in range(nshards)]
+        for s in range(self.num_slots - 1, -1, -1):
+            parts[s % nshards].append(s)
+        return parts
 
     @property
     def free_slots(self) -> int:
-        return len(self._free)
+        return self.num_slots - self.used_slots
 
     @property
     def used_slots(self) -> int:
-        return self.num_slots - len(self._free)
+        return sum(1 for o in self._owner if o is not None)
 
     def occupancy(self) -> float:
         return self.used_slots / self.num_slots
 
-    def try_alloc(self, key: PageKey) -> Optional[int]:
-        if not self._free:
-            return None
-        slot = self._free.pop()
+    def claim(self, slot: int, key: PageKey) -> None:
+        """Record ``key`` as the owner of ``slot`` (caller holds shard lock)."""
+        assert self._owner[slot] is None, f"slot {slot} already owned"
         self._owner[slot] = key
-        return slot
 
-    def free(self, slot: int) -> None:
+    def release(self, slot: int) -> None:
         assert self._owner[slot] is not None, f"double free of slot {slot}"
         self._owner[slot] = None
-        self._free.append(slot)
 
     def slot_view(self, slot: int, nbytes: Optional[int] = None) -> np.ndarray:
         v = self._mem[slot]

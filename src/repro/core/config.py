@@ -16,6 +16,7 @@ Extensions beyond the paper's list (this repo's adaptive engine, DESIGN.md Â§8â€
 
   UMAP_ADAPTIVE                       enable the online access-pattern classifier (default off)
   UMAP_MAX_BATCH_PAGES                max adjacent pages per coalesced fill (default 16; 1 disables)
+  UMAP_SHARDS                         page-metadata shard count (default 0 = min(16, 2*fillers))
 
 Programmatic control mirrors the paper's ``umapcfg_set_xx`` interfaces:
 construct :class:`UMapConfig` directly or call :func:`from_env`.
@@ -118,6 +119,15 @@ class UMapConfig:
     # effective batch is min(max_batch_pages, store.batch_read_hint).
     max_batch_pages: int = 16                # UMAP_MAX_BATCH_PAGES
 
+    # --- sharded concurrency (DESIGN.md Â§12) --------------------------------
+    # Page metadata (table + slot free lists + eviction state) is striped
+    # into `shards` independent lock domains keyed by hash(PageKey), so
+    # concurrent faults on different pages never contend.  0 = auto
+    # (min(16, 2 * num_fillers)); the service additionally clamps to the
+    # slot count so every shard owns at least one buffer slot.  mmap_compat
+    # forces a single shard (the kernel's mmap_sem serialization).
+    shards: int = 0                          # UMAP_SHARDS
+
     # --- mmap-baseline emulation --------------------------------------------
     # When True, the pager is frozen to kernel-mmap semantics: 4 KiB pages,
     # synchronous fault resolution, heuristic seq/random readahead, and an
@@ -142,11 +152,35 @@ class UMapConfig:
             raise ValueError(f"max_batch_pages must be >= 1, got {self.max_batch_pages}")
         if self.pattern_window < 4:
             raise ValueError(f"pattern_window must be >= 4, got {self.pattern_window}")
+        if self.shards < 0:
+            raise ValueError(f"shards must be >= 0 (0 = auto), got {self.shards}")
 
     @property
     def num_slots(self) -> int:
         """Number of page slots in the buffer."""
         return max(1, self.buffer_size // self.page_size)
+
+    @property
+    def effective_shards(self) -> int:
+        """Shard count a service built from this config instantiates.
+
+        ``shards == 0`` selects the auto heuristic ``min(16, 2 * fillers)``
+        (enough stripes that fillers plus app threads rarely collide, without
+        fragmenting tiny buffers); the result is clamped so every stripe
+        owns at least ``MIN_SLOTS_PER_SHARD`` buffer slots â€” slot free lists
+        are stripe-private, and 1â€“2-slot stripes thrash (two hot pages on
+        one stripe evict each other on every touch even while other stripes
+        sit on free slots).  ``mmap_compat`` pins the count to 1 â€” the
+        kernel's single ``mmap_sem`` domain is exactly the bottleneck the
+        sharded pager removes (DESIGN.md Â§12).
+        """
+        if self.mmap_compat:
+            return 1
+        n = self.shards if self.shards > 0 else min(16, 2 * self.num_fillers)
+        return max(1, min(n, self.num_slots // self.MIN_SLOTS_PER_SHARD))
+
+    #: Floor on buffer slots per metadata stripe (see ``effective_shards``).
+    MIN_SLOTS_PER_SHARD = 4
 
     def replace(self, **kw) -> "UMapConfig":
         return dataclasses.replace(self, **kw)
@@ -180,6 +214,8 @@ class UMapConfig:
             kw["adaptive"] = env["UMAP_ADAPTIVE"].strip().lower() in ("1", "true", "yes", "on")
         if "UMAP_MAX_BATCH_PAGES" in env:
             kw["max_batch_pages"] = int(env["UMAP_MAX_BATCH_PAGES"])
+        if "UMAP_SHARDS" in env:
+            kw["shards"] = int(env["UMAP_SHARDS"])
         kw.update(overrides)
         return cls(**kw)
 
@@ -203,6 +239,7 @@ class UMapConfig:
             mmap_compat=True,
             adaptive=False,        # the kernel has no app-pattern engine
             max_batch_pages=1,     # kernel faults resolve one page at a time
+            shards=1,              # one mmap_sem domain per address space
         )
         kw.update(overrides)
         return cls(**kw)

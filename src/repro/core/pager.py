@@ -1,22 +1,42 @@
-"""Paging service: fault queue + filler/evictor pools (paper §3.1–3.3).
+"""Paging service: sharded metadata, work-stealing fillers, decoupled I/O.
 
-Structure (mirrors Figure 1 of the paper):
+Structure (paper §3.1–3.3, Figure 1, plus the sharded-concurrency redesign
+documented in DESIGN.md §12):
 
-  * Application threads touching a region post *fault events* into a FIFO
-    work queue and block on the page's event (the userfaultfd analogue: the
-    faulting thread sleeps; it is woken only after the page is atomically
-    installed — UFFDIO_COPY semantics).
-  * A configurable pool of **fillers** drains the shared queue.  Because the
-    queue is shared across *all* regions, hot regions naturally receive more
-    workers — the paper's dynamic load balancing (§3.3, work-stealing style).
-  * A pool of **evictors** serves write-back work: watermark-triggered dirty
-    flushes (§3.5) and capacity evictions.
-  * A low-concurrency **manager** (here: the watermark monitor thread, see
-    watermark.py) polls buffer state, mirroring the paper's manager threads
-    that poll the kernel for tracked events.
+  * Application threads touching a region post *fault events* and block on
+    the page's event (the userfaultfd analogue: the faulting thread sleeps;
+    it is woken only after the page is atomically installed — UFFDIO_COPY
+    semantics).
+  * Page metadata is striped into N **shards** (``config.shards`` /
+    ``UMAP_SHARDS``, default ``min(16, 2*fillers)``), keyed by
+    ``hash((region_id, page_no)) % N``.  Each shard owns its own lock +
+    condition, page table, eviction-policy instance, buffer-slot free list,
+    and stat counters — concurrent faults on *different* pages contend only
+    when they hash to the same stripe.  The seed design's single global
+    ``RLock`` is exactly the centralized page-metadata locking that eBPF-mm
+    and the SVM studies (PAPERS.md) identify as the first scalability wall.
+  * A pool of **fillers** serves fills from *per-filler deques*: fill work
+    is routed by coalescing granule (adjacent pages land on one deque so
+    they can resolve as one batched store read), and an idle filler
+    **steals** a batch from the busiest peer — the paper's §3.3 dynamic
+    load balancing as an explicit protocol rather than a shared queue.
+  * The read path is **decoupled from the write path**: fillers only ever
+    read.  A filler that needs a slot drops *clean* victims inline (no I/O)
+    and, when none exist, posts dirty pages to the dedicated **cleaner
+    queue** and waits — write-back is performed exclusively by the evictor
+    pool, driven by watermark backpressure (watermark.py), so a write-back
+    burst can no longer stall demand fills.
+  * A low-concurrency **manager** (the watermark monitor thread) polls
+    dirty state, mirroring the paper's manager threads.
 
-I/O always happens *outside* the metadata lock, so fillers genuinely overlap
-on stores whose reads release the GIL (file I/O, remote-latency sleeps).
+I/O always happens *outside* shard locks, so fillers genuinely overlap on
+stores whose reads release the GIL (file I/O, remote-latency sleeps).
+
+Lock ordering (DESIGN.md §12 — violating this is a deadlock):
+
+  1. ``service.lock`` (region registry, policy swaps, adaptive retunes)
+  2. one shard lock at a time (never two shards simultaneously)
+  3. one fill-deque condition at a time (never two nested)
 
 Two engine extensions beyond the paper's static design (DESIGN.md §8–9):
 
@@ -27,28 +47,36 @@ Two engine extensions beyond the paper's static design (DESIGN.md §8–9):
     Static hints (explicit ``readahead_pages=`` or ``region.advise``) always
     take precedence — the classifier never touches pinned regions.
   * **Fault coalescing** — fillers drain runs of *adjacent* pending pages
-    from the queue and resolve them with one batched store read
+    from their own deque and resolve them with one batched store read
     (``BackingStore.read_into_batch``): one latency charge / syscall per
-    run, all pages installed atomically under a single lock acquisition,
-    every blocked faulting thread woken.  ``config.max_batch_pages=1``
-    disables it.
+    run, pages installed under per-shard lock acquisitions, every blocked
+    faulting thread woken.  ``config.max_batch_pages=1`` disables it.
 
 The ``mmap_compat`` configuration freezes this machinery to kernel-mmap
-semantics (synchronous resolution on the faulting thread, heuristic
-readahead, 10%-dirty flush, no coalescing, no adaptation) and is the
-paper's comparison baseline.
+semantics (synchronous resolution on the faulting thread serialized on an
+``mmap_sem`` analogue, ONE metadata shard, heuristic readahead, 10%-dirty
+flush, no coalescing, no adaptation) and is the paper's comparison baseline.
 """
 
 from __future__ import annotations
 
+import contextlib
 import queue
 import threading
+import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, TYPE_CHECKING
 
-from .buffer import PageBuffer, make_policy
+from .buffer import EvictionPolicy, PageBuffer, make_policy
 from .config import UMapConfig
-from .pagetable import PageEntry, PageKey, PageState, PageTable
+from .pagetable import (
+    PageEntry,
+    PageKey,
+    PageState,
+    PageTable,
+    ShardedPageTableView,
+)
 from .pattern import AccessPatternClassifier
 from .watermark import WatermarkMonitor
 
@@ -56,8 +84,33 @@ if TYPE_CHECKING:  # pragma: no cover
     from .region import UMapRegion
 
 
+# Counters that live in a shard and are mutated only under that shard's lock
+# (the seed design incremented some of these outside its global lock — the
+# per-shard discipline is the data-race fix, and snapshot() aggregates them
+# lock-free: int reads are GIL-consistent).
+_SHARD_COUNTERS = (
+    "demand_faults", "page_hits", "wait_hits", "prefetch_fills",
+    "prefetch_hits", "evictions", "writebacks", "coalesced_fills",
+    "coalesced_pages", "lock_contended", "fill_stalls",
+)
+
+# Service-level counters: each has a single writer thread (watermark
+# monitor, classifier path under service.lock) — except fill_queue_peak,
+# a telemetry-only racy max documented in _submit_fill_many.  Steal
+# accounting lives in per-filler single-writer dicts instead.
+_SERVICE_COUNTERS = (
+    "watermark_flushes", "fill_queue_peak", "pattern_transitions",
+)
+
+
 @dataclass
 class ServiceStats:
+    """Aggregated service statistics (see ``PagingService.stats``).
+
+    Constructed on demand from per-shard counters; ``per_shard`` carries the
+    un-aggregated stripe detail (contention, stalls, fills per shard).
+    """
+
     demand_faults: int = 0
     prefetch_fills: int = 0
     prefetch_hits: int = 0          # prefetched pages later touched
@@ -70,12 +123,35 @@ class ServiceStats:
     coalesced_fills: int = 0        # batched fill operations (>= 2 pages each)
     coalesced_pages: int = 0        # pages installed via batched fills
     pattern_transitions: int = 0    # classifier-driven retunes applied
+    shards: int = 1                 # metadata stripe count
+    steals: int = 0                 # work-stealing events (idle filler stole)
+    stolen_work: int = 0            # fill work items moved by stealing
+    lock_contended: int = 0         # shard-lock acquisitions that had to wait
+    fill_stalls: int = 0            # fills that waited on cleaner backpressure
     per_filler_fills: Dict[int, int] = field(default_factory=dict)
+    per_shard: List[dict] = field(default_factory=list)
 
     def snapshot(self) -> dict:
-        d = {k: v for k, v in self.__dict__.items() if k != "per_filler_fills"}
+        d = {k: v for k, v in self.__dict__.items()
+             if k not in ("per_filler_fills", "per_shard")}
         d["per_filler_fills"] = dict(self.per_filler_fills)
+        d["per_shard"] = [dict(s) for s in self.per_shard]
         return d
+
+
+class _Shard:
+    """One metadata stripe: lock, condition, table, policy, slots, counters."""
+
+    __slots__ = ("index", "lock", "cond", "table", "policy", "free", "counters")
+
+    def __init__(self, index: int, policy_name: str):
+        self.index = index
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
+        self.table = PageTable()
+        self.policy: EvictionPolicy = make_policy(policy_name)
+        self.free: List[int] = []        # buffer slots owned by this shard
+        self.counters: Dict[str, int] = {k: 0 for k in _SHARD_COUNTERS}
 
 
 class _FillWork:
@@ -94,19 +170,47 @@ class PagingService:
 
     def __init__(self, config: UMapConfig):
         self.config = config
+        # Service-level lock: region registry, runtime policy swaps, adaptive
+        # retunes.  Ordering: may be held while taking ONE shard lock; shard
+        # locks must never be held while taking this (DESIGN.md §12).
         self.lock = threading.RLock()
-        self.cond = threading.Condition(self.lock)   # slot availability
-        self.table = PageTable()
         self.buffer = PageBuffer(config.num_slots, config.page_size)
-        self.policy = make_policy(config.eviction_policy)
-        self.stats = ServiceStats()
+
+        nshards = config.effective_shards
+        self.shards: List[_Shard] = [
+            _Shard(i, config.eviction_policy) for i in range(nshards)
+        ]
+        for shard, slots in zip(self.shards, self.buffer.partition(nshards)):
+            shard.free = slots
+        self.table = ShardedPageTableView(
+            [s.table for s in self.shards], self._shard_index)
+
+        self._svc: Dict[str, int] = {k: 0 for k in _SERVICE_COUNTERS}
+        self._per_filler_fills: Dict[int, int] = {}
+        # Steal accounting is per-filler (single writer each), aggregated in
+        # `stats` — no shared mutable counter, hence no data race.
+        self._per_filler_steals: Dict[int, int] = {}
+        self._per_filler_stolen: Dict[int, int] = {}
         self._regions: Dict[int, "UMapRegion"] = {}
         self._classifiers: Dict[int, AccessPatternClassifier] = {}
         self._next_region_id = 0
         self._closed = False
 
-        self._fill_q: "queue.Queue" = queue.Queue()
-        self._evict_q: "queue.Queue" = queue.Queue()
+        # Read path: per-filler deques + work stealing, each deque guarded by
+        # its OWN condition — there is no global queue lock (a shared one
+        # re-centralizes contention as a steal ping-pong convoy the moment
+        # fillers outpace posters).  Submission notifies the routed owner;
+        # idle fillers rescan on a short timeout and steal from the busiest
+        # peer.  Never hold two deque locks at once (steal moves work in two
+        # independent critical sections).
+        self._fill_qs: List[deque] = []
+        self._fill_cvs: List[threading.Condition] = []
+        self._fill_shutdown = False
+
+        # Write path: the dedicated cleaner queue.  Fillers never write;
+        # dirty pages drain through here (watermark backpressure or direct
+        # filler pressure when a shard runs out of clean victims).
+        self._clean_q: "queue.Queue" = queue.Queue()
 
         # Kernel-mmap fidelity: Linux serializes fault handling per address
         # space on mmap_sem — the scalability bottleneck the paper's related
@@ -117,6 +221,9 @@ class PagingService:
         self._fillers: List[threading.Thread] = []
         self._evictors: List[threading.Thread] = []
         if not config.mmap_compat:
+            self._fill_qs = [deque() for _ in range(config.num_fillers)]
+            self._fill_cvs = [threading.Condition()
+                              for _ in range(config.num_fillers)]
             for i in range(config.num_fillers):
                 t = threading.Thread(target=self._filler_loop, args=(i,),
                                      name=f"umap-filler-{i}", daemon=True)
@@ -129,9 +236,61 @@ class PagingService:
             self._evictors.append(t)
 
         # The "manager": monitors dirty ratio against the watermarks and
-        # posts flush batches to the evictor queue (paper §3.5).
+        # posts flush batches to the cleaner queue (paper §3.5).
         self.watermark = WatermarkMonitor(self)
         self.watermark.start()
+
+    # ----------------------------------------------------------- sharding
+
+    def _shard_index(self, key: PageKey) -> int:
+        return hash(key) % len(self.shards)
+
+    def _shard_of(self, key: PageKey) -> _Shard:
+        return self.shards[hash(key) % len(self.shards)]
+
+    @contextlib.contextmanager
+    def _locked(self, shard: _Shard):
+        """Acquire a shard lock adaptively, counting contended acquisitions.
+
+        Adaptive-mutex discipline (glibc ``PTHREAD_MUTEX_ADAPTIVE_NP``):
+        on a failed fast acquire, yield the scheduler once and retry before
+        futex-parking.  Shard critical sections are microseconds, so a
+        transient collision — the common case at healthy stripe counts —
+        resolves on the yield and never parks; parking (and the lock-convoy
+        regime it can enter, DESIGN.md §12.2) is reserved for sustained
+        contention.
+        """
+        contended = not shard.lock.acquire(blocking=False)
+        if contended:
+            time.sleep(0)                    # one scheduler yield, then park
+            if not shard.lock.acquire(blocking=False):
+                shard.lock.acquire()
+            shard.counters["lock_contended"] += 1
+        try:
+            yield
+        finally:
+            shard.lock.release()
+
+    @property
+    def policy(self) -> EvictionPolicy:
+        """The current eviction policy (all shards run the same one)."""
+        return self.shards[0].policy
+
+    @property
+    def stats(self) -> ServiceStats:
+        """Lock-free aggregate of per-shard + service counters."""
+        agg = ServiceStats(shards=len(self.shards))
+        for shard in self.shards:
+            c = shard.counters
+            for k in _SHARD_COUNTERS:
+                setattr(agg, k, getattr(agg, k) + c[k])
+        for k in _SERVICE_COUNTERS:
+            setattr(agg, k, self._svc[k])
+        agg.steals = sum(self._per_filler_steals.values())
+        agg.stolen_work = sum(self._per_filler_stolen.values())
+        agg.per_filler_fills = dict(self._per_filler_fills)
+        agg.per_shard = [dict(s.counters) for s in self.shards]
+        return agg
 
     # ------------------------------------------------------------------ API
 
@@ -151,6 +310,11 @@ class PagingService:
             return rid
 
     def unregister(self, region: "UMapRegion") -> None:
+        # Closing gate FIRST: new faults raise, queued fills are abandoned by
+        # the fillers, so flush_region's drain below terminates and no fill
+        # can re-install a page after the region is dropped (the seed had a
+        # window where exactly that ghost install leaked a slot forever).
+        region._closing = True
         self.flush_region(region, evict=True)
         with self.lock:
             self._regions.pop(region.region_id, None)
@@ -163,10 +327,12 @@ class PagingService:
             self.flush_region(region, evict=False)
         self._closed = True
         self.watermark.stop()
-        for _ in self._fillers:
-            self._fill_q.put(_SHUTDOWN)
+        self._fill_shutdown = True
+        for cv in self._fill_cvs:
+            with cv:
+                cv.notify_all()
         for _ in self._evictors:
-            self._evict_q.put(_SHUTDOWN)
+            self._clean_q.put(_SHUTDOWN)
         for t in self._fillers + self._evictors:
             t.join(timeout=5.0)
 
@@ -179,53 +345,88 @@ class PagingService:
         Issuing all fills for a multi-page request up front keeps the filler
         pool busy (I/O overlap); the caller then pins/copies one page at a
         time via :meth:`acquire_one`, which bounds pins-per-thread to one and
-        makes the pager deadlock-free under any buffer size.
+        makes the pager deadlock-free under any buffer size.  Pages are
+        posted in ascending order so adjacent fills stay adjacent in the
+        routed deque (coalescing, DESIGN.md §9).
         """
-        to_fill: List[PageEntry] = []
-        with self.lock:
-            for pno in page_nos:
-                key = (region.region_id, pno)
-                if self.table.get(key) is None:
-                    e = self.table.insert_filling(key)
-                    if demand:
-                        self.stats.demand_faults += 1
-                    else:
-                        e.prefetched = True
-                    to_fill.append(e)
-            ra_fill = (self._post_readahead(region, page_nos)
-                       if demand and region.readahead_pages > 0 else [])
-        for e in to_fill + ra_fill:
-            self._dispatch_fill(region, e)
+        to_fill = self._insert_absent(region, page_nos, demand=demand)
+        ra_fill = (self._post_readahead(region, page_nos)
+                   if demand and region.readahead_pages > 0 else [])
+        self._dispatch_fills(region, to_fill + ra_fill)
         if demand and to_fill:
             self._observe_faults(region, [e.key[1] for e in to_fill])
+
+    def _insert_absent(self, region: "UMapRegion", page_nos: List[int],
+                       demand: bool) -> List[PageEntry]:
+        """Insert FILLING entries for the absent pages of ``page_nos``.
+
+        One lock acquisition per touched stripe, not per page: under heavy
+        thread counts every blocked acquire risks a full GIL switch
+        interval, so the acquisition count is the latency budget.  Returns
+        the new entries in ascending page order so adjacent fills stay
+        adjacent in the routed deques (coalescing).
+        """
+        rid = region.region_id
+        by_shard: Dict[int, List[int]] = {}
+        for pno in page_nos:
+            by_shard.setdefault(self._shard_index((rid, pno)), []).append(pno)
+        out: List[PageEntry] = []
+        for si, pnos in by_shard.items():
+            shard = self.shards[si]
+            with self._locked(shard):
+                for pno in pnos:
+                    key = (rid, pno)
+                    if shard.table.get(key) is None:
+                        e = shard.table.insert_filling(key)
+                        if demand:
+                            shard.counters["demand_faults"] += 1
+                        else:
+                            e.prefetched = True
+                        out.append(e)
+        out.sort(key=lambda e: e.key[1])
+        return out
+
+    def _dispatch_fills(self, region: "UMapRegion",
+                        entries: List[PageEntry]) -> None:
+        if self.config.mmap_compat:
+            for e in entries:
+                self._do_fill(region, e, worker_id=-1)
+        else:
+            self._submit_fill_many(region, entries)
 
     def acquire_one(self, region: "UMapRegion", page_no: int) -> PageEntry:
         """Pin one page, faulting it in if needed (userfaultfd-style block).
 
         The caller must not hold any other pins (deadlock-freedom invariant).
+        Raises ``RuntimeError`` once the region has started closing — the
+        guard that closes the flush/unregister re-install race.
         """
         key = (region.region_id, page_no)
+        shard = self._shard_of(key)
         first_attempt = True
         while True:
+            if region._closing:
+                raise RuntimeError(
+                    f"region {region.name or region.region_id} is closing")
             dispatch: Optional[PageEntry] = None
             waitee: Optional[PageEntry] = None
-            with self.lock:
-                e = self.table.get(key)
+            with self._locked(shard):
+                e = shard.table.get(key)
                 if e is None:
-                    e = self.table.insert_filling(key)
-                    self.stats.demand_faults += 1
+                    e = shard.table.insert_filling(key)
+                    shard.counters["demand_faults"] += 1
                     dispatch = e
                     waitee = e
                 elif e.state is PageState.PRESENT:
                     e.pins += 1
-                    self.policy.on_touch(key)
+                    shard.policy.on_touch(key)
                     if first_attempt:
-                        self.stats.page_hits += 1
+                        shard.counters["page_hits"] += 1
                     else:
-                        self.stats.wait_hits += 1
+                        shard.counters["wait_hits"] += 1
                     if e.prefetched and not e.touched_after_prefetch:
                         e.touched_after_prefetch = True
-                        self.stats.prefetch_hits += 1
+                        shard.counters["prefetch_hits"] += 1
                     return e
                 else:  # FILLING / CLEANING / EVICTING
                     waitee = e
@@ -235,6 +436,70 @@ class PagingService:
             waitee.event.wait(timeout=0.05)
             first_attempt = False
 
+    # Ceiling for the locked-copy fast path: a 64 KiB memcpy (~microseconds)
+    # is cheaper than two extra contended acquisitions, but holding a stripe
+    # lock across a multi-megabyte copy (UMAP_PAGESIZE reaches 8 MiB) would
+    # serialize every fault on the stripe behind data movement — those
+    # copies take the pinning path, which copies with no metadata lock held.
+    LOCKED_COPY_MAX_BYTES = 64 * 1024
+
+    def copy_page_out(self, region: "UMapRegion", page_no: int,
+                      page_off: int, out) -> bool:
+        """Fast read path: copy ``out.nbytes`` bytes from a PRESENT page
+        under ONE stripe-lock acquisition.
+
+        Replaces the pin → memcpy → release round-trip (three acquisitions)
+        on the hit path: the page cannot be evicted mid-copy because the
+        copy itself holds the stripe lock, and a small memcpy is far
+        shorter than two extra contended acquisitions (large copies are
+        refused — see ``LOCKED_COPY_MAX_BYTES``).  Returns False when the
+        fast path does not apply — the caller falls back to the faulting
+        :meth:`acquire_one` path.
+        """
+        if region._closing:
+            return False      # acquire_one enforces the closing gate
+        if out.nbytes > self.LOCKED_COPY_MAX_BYTES:
+            return False
+        key = (region.region_id, page_no)
+        shard = self._shard_of(key)
+        with self._locked(shard):
+            e = shard.table.get(key)
+            if e is None or e.state is not PageState.PRESENT:
+                return False
+            shard.policy.on_touch(key)
+            shard.counters["page_hits"] += 1
+            if e.prefetched and not e.touched_after_prefetch:
+                e.touched_after_prefetch = True
+                shard.counters["prefetch_hits"] += 1
+            slot = self.buffer.slot_view(e.slot, self.buffer.slot_size)
+            out[:] = slot[page_off : page_off + out.nbytes]
+            return True
+
+    def copy_page_in(self, region: "UMapRegion", page_no: int,
+                     page_off: int, src) -> bool:
+        """Fast write path: copy ``src`` into a PRESENT page and mark it
+        dirty under ONE stripe-lock acquisition (see :meth:`copy_page_out`).
+        The caller pokes the watermark monitor outside the lock."""
+        if region._closing:
+            return False      # acquire_one enforces the closing gate
+        if src.nbytes > self.LOCKED_COPY_MAX_BYTES:
+            return False
+        key = (region.region_id, page_no)
+        shard = self._shard_of(key)
+        with self._locked(shard):
+            e = shard.table.get(key)
+            if e is None or e.state is not PageState.PRESENT:
+                return False
+            shard.policy.on_touch(key)
+            shard.counters["page_hits"] += 1
+            if e.prefetched and not e.touched_after_prefetch:
+                e.touched_after_prefetch = True
+                shard.counters["prefetch_hits"] += 1
+            slot = self.buffer.slot_view(e.slot, self.buffer.slot_size)
+            slot[page_off : page_off + src.nbytes] = src
+            shard.table.mark_dirty(e)
+            return True
+
     def _dispatch_fill(self, region: "UMapRegion", entry: PageEntry) -> None:
         if self.config.mmap_compat:
             self._do_fill(region, entry, worker_id=-1)
@@ -242,14 +507,16 @@ class PagingService:
             self._submit_fill(region, entry)
 
     def release_one(self, entry: PageEntry) -> None:
-        with self.lock:
+        shard = self._shard_of(entry.key)
+        with self._locked(shard):
             entry.pins -= 1
             assert entry.pins >= 0, f"pin underflow on {entry.key}"
-            self.cond.notify_all()
+            shard.cond.notify_all()
 
     def mark_dirty_one(self, entry: PageEntry) -> None:
-        with self.lock:
-            self.table.mark_dirty(entry)
+        shard = self._shard_of(entry.key)
+        with self._locked(shard):
+            shard.table.mark_dirty(entry)
         self.watermark.poke()
 
     # ------------------------------------------- adaptive engine (DESIGN.md §8)
@@ -258,7 +525,7 @@ class PagingService:
         """Feed demand-fault page numbers to the region's classifier.
 
         No-op unless ``config.adaptive`` and the region is not hint-pinned.
-        Called outside the metadata lock (the classifier has its own); a
+        Called outside the metadata locks (the classifier has its own); a
         confirmed phase transition retunes the region immediately.
         """
         clf = self._classifiers.get(region.region_id)
@@ -275,31 +542,37 @@ class PagingService:
     def _apply_decision(self, region: "UMapRegion", decision) -> None:
         """Retune a region from a confirmed classifier decision.
 
-        Re-checks pinning under the lock: advise() may have pinned the
-        region while this decision was in flight, and static hints must win
-        even against a decision already computed.
+        Re-checks pinning under the service lock: advise() may have pinned
+        the region while this decision was in flight, and static hints must
+        win even against a decision already computed.
         """
         with self.lock:
             if region.hint_pinned:
                 return
             region.readahead_pages = decision.read_ahead
             region.detected_stride = decision.stride
-            self.stats.pattern_transitions += 1
+            self._svc["pattern_transitions"] += 1
         self.set_eviction_policy(decision.eviction_policy)
 
     def set_eviction_policy(self, name: str) -> None:
         """Swap the eviction policy at runtime (adaptive engine / app call).
 
-        The fresh policy adopts all currently-resident pages; recency
-        history is intentionally dropped (the swap happens because the
-        access pattern changed — see ``EvictionPolicy.adopt``).
+        Each shard gets a fresh policy instance that adopts that shard's
+        currently-resident pages; recency history is intentionally dropped
+        (the swap happens because the access pattern changed — see
+        ``EvictionPolicy.adopt``).  Shards are swapped one at a time under
+        their own locks (never two shard locks at once); the momentary
+        cross-shard mix of old/new policy is harmless — victim choice is
+        advisory, residency is not touched.
         """
         with self.lock:
-            if name == self.policy.name:
+            if name == self.shards[0].policy.name:
                 return
-            new_policy = make_policy(name)
-            new_policy.adopt(self.table.resident_keys())
-            self.policy = new_policy
+            for shard in self.shards:
+                with self._locked(shard):
+                    new_policy = make_policy(name)
+                    new_policy.adopt(shard.table.resident_keys())
+                    shard.policy = new_policy
 
     def pattern_snapshot(self, region_id: int) -> Optional[dict]:
         """Telemetry: the classifier's current phase for one region."""
@@ -310,17 +583,8 @@ class PagingService:
 
     def prefetch(self, region: "UMapRegion", page_nos: List[int]) -> int:
         """App-driven prefetch of an *arbitrary* page set (paper §3.6)."""
-        to_fill: List[PageEntry] = []
-        with self.lock:
-            for pno in page_nos:
-                key = (region.region_id, pno)
-                if self.table.get(key) is not None:
-                    continue
-                e = self.table.insert_filling(key)
-                e.prefetched = True
-                to_fill.append(e)
-        for e in to_fill:
-            self._dispatch_fill(region, e)
+        to_fill = self._insert_absent(region, page_nos, demand=False)
+        self._dispatch_fills(region, to_fill)
         return len(to_fill)
 
     def _post_readahead(self, region: "UMapRegion", faulted: List[int]) -> List[PageEntry]:
@@ -330,8 +594,8 @@ class PagingService:
         stride, the window is posted *along that stride* (pages ``base +
         k*stride``) — prefetch a static advice vocabulary cannot express.
         Negative strides (backward scans) read ahead *downward* from the
-        lowest faulted page.  Called under the lock; returns the new entries
-        for the caller to dispatch outside the lock.
+        lowest faulted page.  Returns the new entries for the caller to
+        dispatch.
         """
         npages = region.num_pages
         stride = getattr(region, "detected_stride", 1) or 1
@@ -342,68 +606,119 @@ class PagingService:
             if not (0 <= pno < npages):
                 break
             key = (region.region_id, pno)
-            if self.table.get(key) is None:
-                e = self.table.insert_filling(key)
-                e.prefetched = True
-                out.append(e)
+            shard = self._shard_of(key)
+            with self._locked(shard):
+                if shard.table.get(key) is None:
+                    e = shard.table.insert_filling(key)
+                    e.prefetched = True
+                    out.append(e)
         return out
 
-    # --------------------------------------------------------- fill workers
+    # ------------------------------- fill queues + work stealing (§3.3)
 
     def _submit_fill(self, region: "UMapRegion", entry: PageEntry) -> None:
-        self._fill_q.put(_FillWork(region, entry))
-        self.stats.fill_queue_peak = max(self.stats.fill_queue_peak,
-                                         self._fill_q.qsize())
+        self._submit_fill_many(region, [entry])
 
-    def _filler_loop(self, worker_id: int) -> None:
-        while True:
-            work = self._fill_q.get()
-            if work is _SHUTDOWN:
-                return
-            batch = self._coalesce(work)
-            try:
-                if len(batch) == 1:
-                    self._do_fill(work.region, work.entry, worker_id)
-                else:
-                    self._do_fill_batch(work.region, batch, worker_id)
-            except Exception:  # pragma: no cover - keep the pool alive
-                import traceback
-                traceback.print_exc()
-                with self.lock:
-                    for e in batch:
-                        e.event.set()
+    def _submit_fill_many(self, region: "UMapRegion",
+                          entries: List[PageEntry]) -> None:
+        """Route fill work to filler deques by coalescing granule.
 
-    # ------------------------------------------ fault coalescing (DESIGN.md §9)
-
-    def _coalesce(self, work: _FillWork) -> List[PageEntry]:
-        """Drain pending fills adjacent to ``work`` into one batch.
-
-        Pops queued work non-blocking, keeps the maximal run of pages
-        consecutive with the seed (same region, capped at
-        ``min(config.max_batch_pages, store.batch_read_hint)``), and requeues
-        everything else.  Returns the run sorted by page number (always
-        containing the seed entry).
+        Adjacent pages (same ``max_batch_pages`` granule) land on the same
+        deque, so the owning filler can drain them as one batched store
+        read; distinct granules spread across the pool for I/O overlap.
+        Each routed deque is touched under ITS OWN condition — there is no
+        global queue lock to re-centralize the contention the metadata
+        shards remove.
         """
-        region = work.region
-        limit = min(self.config.max_batch_pages,
-                    getattr(region.store, "batch_read_hint", 1))
-        if limit <= 1 or region.fill_callback is not None:
-            return [work.entry]
-        drained: List[object] = []
-        try:
-            while len(drained) < 4 * limit:
-                drained.append(self._fill_q.get_nowait())
-        except queue.Empty:
-            pass
+        if not entries:
+            return
+        granule = max(1, self.config.max_batch_pages)
+        nq = len(self._fill_qs)
+        rid = region.region_id
+        # The 3-tuple salt keeps deque routing decorrelated from metadata
+        # sharding (hash((rid, pno)) % N): with num_fillers == shards an
+        # unsalted route would statically bind each filler to one stripe.
+        by_route: Dict[int, List[_FillWork]] = {}
+        for entry in entries:
+            route = hash((rid, entry.key[1] // granule, "route")) % nq
+            by_route.setdefault(route, []).append(_FillWork(region, entry))
+        for route, works in by_route.items():
+            cv = self._fill_cvs[route]
+            with cv:
+                self._fill_qs[route].extend(works)
+                cv.notify()
+        # Telemetry-only racy read: exact tracking would need a global lock.
+        depth = sum(len(q) for q in self._fill_qs)
+        if depth > self._svc["fill_queue_peak"]:
+            self._svc["fill_queue_peak"] = depth
+
+    def _steal(self, worker_id: int) -> bool:
+        """Steal ~half the busiest peer's deque into our own.
+
+        Called holding NO deque locks: the victim's condition and our own
+        are taken one after the other (never nested), so steal paths cannot
+        deadlock.  The tail of the victim's deque is taken (the owner
+        consumes from the head, so a batch it may be coalescing is left
+        alone) and order is preserved, keeping stolen runs coalescible by
+        the thief.  ``len(deque)`` reads are GIL-atomic — a stale scan just
+        means a failed steal attempt.
+        """
+        victim_id = -1
+        victim_len = 1        # require >= 2: a lone item belongs to its owner
+        for i, q in enumerate(self._fill_qs):
+            if i != worker_id and len(q) > victim_len:
+                victim_id, victim_len = i, len(q)
+        if victim_id < 0:
+            # Desperation pass: any single queued item is better than idling.
+            for i, q in enumerate(self._fill_qs):
+                if i != worker_id and len(q) > 0:
+                    victim_id = i
+                    break
+            if victim_id < 0:
+                return False
+        vq = self._fill_qs[victim_id]
+        stolen: List[_FillWork] = []
+        with self._fill_cvs[victim_id]:
+            k = max(1, len(vq) // 2)
+            for _ in range(min(k, len(vq))):
+                stolen.append(vq.pop())
+        if not stolen:
+            return False
+        stolen.reverse()
+        with self._fill_cvs[worker_id]:
+            self._fill_qs[worker_id].extend(stolen)
+        # Single-writer counters (this filler only): race-free by ownership.
+        self._per_filler_steals[worker_id] = \
+            self._per_filler_steals.get(worker_id, 0) + 1
+        self._per_filler_stolen[worker_id] = \
+            self._per_filler_stolen.get(worker_id, 0) + len(stolen)
+        return True
+
+    def _drain_run(self, dq: deque, seed_work: _FillWork,
+                   limit: int) -> List[PageEntry]:
+        """Drain pending fills adjacent to the seed from the owner's deque.
+
+        Scans a bounded prefix of the deque for same-region pages within
+        ``limit`` of the seed, keeps the maximal contiguous run containing
+        the seed, and puts everything else back in order.  Called with
+        the owner's deque condition held; returns the run sorted by page
+        number.
+        """
+        region = seed_work.region
+        seed = seed_work.entry.key[1]
+        lo, hi = seed - limit, seed + limit
         by_pno: Dict[int, _FillWork] = {}
-        leftover: List[object] = []
-        for w in drained:
-            if w is not _SHUTDOWN and w.region is region:
-                by_pno[w.entry.key[1]] = w
+        kept: List[_FillWork] = []
+        scanned = 0
+        while dq and scanned < 4 * limit:
+            w = dq.popleft()
+            scanned += 1
+            pno = w.entry.key[1]
+            if w.region is region and lo <= pno <= hi and pno not in by_pno:
+                by_pno[pno] = w
             else:
-                leftover.append(w)
-        seed = work.entry.key[1]
-        run = [work.entry]
+                kept.append(w)
+        run = [seed_work.entry]
         p = seed + 1
         while p in by_pno and len(run) < limit:
             run.append(by_pno.pop(p).entry)
@@ -413,74 +728,126 @@ class PagingService:
         while p in by_pno and len(run) + len(back) < limit:
             back.append(by_pno.pop(p).entry)
             p -= 1
-        for w in by_pno.values():
-            leftover.append(w)
-        for w in leftover:
-            self._fill_q.put(w)
+        kept.extend(by_pno.values())
+        dq.extendleft(reversed(kept))
         return list(reversed(back)) + run
+
+    def _take_unit(self, dq: deque, work: _FillWork):
+        """One unit of fill work: the seed plus its coalescible run (called
+        with the owner's deque condition held)."""
+        limit = min(self.config.max_batch_pages,
+                    getattr(work.region.store, "batch_read_hint", 1))
+        if limit > 1 and work.region.fill_callback is None:
+            return work.region, self._drain_run(dq, work, limit)
+        return work.region, [work.entry]
+
+    # Units a filler pops per deque acquisition: amortizes the deque lock
+    # when coalescing cannot (max_batch_pages=1 / tiny store hints) while
+    # staying small enough that work stealing keeps the pool balanced.
+    _POP_UNITS = 4
+
+    def _filler_loop(self, worker_id: int) -> None:
+        dq = self._fill_qs[worker_id]
+        cv = self._fill_cvs[worker_id]
+        # Steal-rescan backoff: submissions notify the routed owner directly,
+        # so the timeout only bounds how fast an idle filler notices a BUSY
+        # peer's backlog.  It decays toward 10 ms while work is around and
+        # backs off to 0.5 s when the pool is truly idle — a parked idle
+        # pool costs ~2 wakes/s/filler instead of 100.
+        idle_wait = 0.01
+        while True:
+            units: List = []
+            while not units:
+                with cv:
+                    if not dq and not self._fill_shutdown:
+                        # Owner notification or steal-rescan timeout.
+                        cv.wait(timeout=idle_wait)
+                    while dq and len(units) < self._POP_UNITS:
+                        units.append(self._take_unit(dq, dq.popleft()))
+                if units:
+                    idle_wait = 0.01
+                    break
+                if self._steal(worker_id):
+                    idle_wait = 0.01
+                    continue          # stolen work landed in our deque
+                if self._fill_shutdown:
+                    return
+                idle_wait = min(idle_wait * 2, 0.5)
+            for region, entries in units:
+                try:
+                    if region._closing:
+                        self._abandon_fills(entries)
+                    elif len(entries) == 1:
+                        self._do_fill(region, entries[0], worker_id)
+                    else:
+                        self._do_fill_batch(region, entries, worker_id)
+                except Exception:  # pragma: no cover - keep the pool alive
+                    import traceback
+                    traceback.print_exc()
+                    self._abandon_fills(entries)
+
+    def _abandon_fills(self, entries: List[PageEntry]) -> None:
+        """Drop FILLING entries (closing region / filler error): waiters wake
+        and either re-fault or observe the closing gate."""
+        for e in entries:
+            shard = self._shard_of(e.key)
+            with self._locked(shard):
+                if shard.table.get(e.key) is e and e.state is PageState.FILLING:
+                    shard.table.remove(e)
+                else:
+                    e.event.set()
+                shard.cond.notify_all()
+
+    # ------------------------------------------ fill resolution (read path)
 
     def _do_fill_batch(self, region: "UMapRegion", entries: List[PageEntry],
                        worker_id: int) -> None:
         """Resolve a run of adjacent pages with ONE batched store read.
 
         Slot allocation never *waits* while the batch holds un-installed
-        slots (only opportunistic eviction) — entries that cannot get a slot
-        immediately are requeued as single fills, preserving the pager's
-        deadlock-freedom argument.  All acquired pages are installed
-        atomically under one lock acquisition, waking every blocked faulting
-        thread at once (batched UFFDIO_COPY semantics).
+        slots (only the first allocation may block — the filler holds
+        nothing yet); entries that cannot get a slot immediately are
+        requeued as single fills, preserving the pager's deadlock-freedom
+        argument.  Installs are grouped per shard, waking every blocked
+        faulting thread of the run (batched UFFDIO_COPY semantics).
         """
-        # First slot may block (the filler holds nothing yet) — same
-        # guarantee as the single-fill path.
-        slots = [self._alloc_slot_evicting(entries[0].key)]
-        taken = 1
+        slots = [self._alloc_slot_blocking(entries[0].key)]
         for e in entries[1:]:
             slot = self._try_alloc_slot(e.key)
             if slot is None:
                 break
             slots.append(slot)
-            taken += 1
-        requeued = entries[taken:]
-        entries = entries[:taken]
-        for e in requeued:                  # memory pressure: retry singly
+        taken = len(slots)
+        for e in entries[taken:]:                # memory pressure: retry singly
             self._submit_fill(region, e)
+        entries = entries[:taken]
 
         bufs = [
             self.buffer.slot_view(slot, region.page_nbytes(e.key[1]))
             for e, slot in zip(entries, slots)
         ]
-        # ONE store call for the whole run — I/O outside the lock.
+        # ONE store call for the whole run — I/O outside all locks.
         region.store.read_into_batch(entries[0].key[1] * region.page_size, bufs)
-        with self.lock:
-            for e, slot in zip(entries, slots):
-                self.table.install(e, slot)
-                self.policy.on_install(e.key)
-                if e.prefetched:
-                    self.stats.prefetch_fills += 1
-            if len(entries) > 1:
-                self.stats.coalesced_fills += 1
-                self.stats.coalesced_pages += len(entries)
-            if worker_id >= 0:
-                pf = self.stats.per_filler_fills
-                pf[worker_id] = pf.get(worker_id, 0) + len(entries)
-            self.cond.notify_all()
 
-    def _try_alloc_slot(self, key: PageKey) -> Optional[int]:
-        """Non-blocking slot allocation: evict opportunistically, never wait."""
-        while True:
-            victim: Optional[PageEntry] = None
-            with self.lock:
-                slot = self.buffer.try_alloc(key)
-                if slot is not None:
-                    return slot
-                victims = self.policy.pick_victims(1, self._evictable_key)
-                if not victims:
-                    return None
-                victim = self.table.get(victims[0])
-                victim.state = PageState.EVICTING
-                victim.event.clear()
-                self.policy.on_remove(victim.key)
-            self._evict_now(victim)
+        seed_si = self._shard_index(entries[0].key)
+        groups: Dict[int, List] = {}
+        for e, slot in zip(entries, slots):
+            groups.setdefault(self._shard_index(e.key), []).append((e, slot))
+        for si, pairs in groups.items():
+            shard = self.shards[si]
+            with self._locked(shard):
+                for e, slot in pairs:
+                    shard.table.install(e, slot)
+                    shard.policy.on_install(e.key)
+                    if e.prefetched:
+                        shard.counters["prefetch_fills"] += 1
+                if si == seed_si and len(entries) > 1:
+                    shard.counters["coalesced_fills"] += 1
+                    shard.counters["coalesced_pages"] += len(entries)
+                shard.cond.notify_all()
+        if worker_id >= 0:
+            pf = self._per_filler_fills
+            pf[worker_id] = pf.get(worker_id, 0) + len(entries)
 
     def _do_fill(self, region: "UMapRegion", entry: PageEntry, worker_id: int) -> None:
         if self._mmap_sem is not None:
@@ -491,67 +858,184 @@ class PagingService:
 
     def _do_fill_inner(self, region: "UMapRegion", entry: PageEntry,
                        worker_id: int) -> None:
-        slot = self._alloc_slot_evicting(entry.key)
+        if region._closing:
+            self._abandon_fills([entry])
+            return
+        slot = self._alloc_slot_blocking(entry.key)
         nbytes = region.page_nbytes(entry.key[1])
         buf = self.buffer.slot_view(slot, self.buffer.slot_size)
-        # I/O outside the lock.
+        # I/O outside all locks.
         if region.fill_callback is not None:
             region.fill_callback(entry.key[1], buf[:nbytes])
         else:
             region.store.read_into(entry.key[1] * region.page_size, buf[:nbytes])
-        with self.lock:
-            self.table.install(entry, slot)
-            self.policy.on_install(entry.key)
+        shard = self._shard_of(entry.key)
+        with self._locked(shard):
+            shard.table.install(entry, slot)
+            shard.policy.on_install(entry.key)
             if entry.prefetched:
-                self.stats.prefetch_fills += 1
-            if worker_id >= 0:
-                pf = self.stats.per_filler_fills
-                pf[worker_id] = pf.get(worker_id, 0) + 1
-            self.cond.notify_all()
+                shard.counters["prefetch_fills"] += 1
+            shard.cond.notify_all()
+        if worker_id >= 0:
+            pf = self._per_filler_fills
+            pf[worker_id] = pf.get(worker_id, 0) + 1
 
-    def _alloc_slot_evicting(self, key: PageKey) -> int:
-        """Get a free slot, evicting (write-back if dirty) when full."""
+    # ------------------------------------------------- slot allocation
+
+    def _shard_try_alloc(self, shard: _Shard, key: PageKey) -> Optional[int]:
+        """Pop a free slot from the shard's pool (shard lock held)."""
+        if not shard.free:
+            return None
+        slot = shard.free.pop()
+        self.buffer.claim(slot, key)
+        return slot
+
+    def _clean_victim_ok(self, shard: _Shard, key: PageKey) -> bool:
+        e = shard.table.get(key)
+        return (e is not None and e.state is PageState.PRESENT
+                and e.pins == 0 and not e.dirty)
+
+    def _any_victim_ok(self, shard: _Shard, key: PageKey) -> bool:
+        e = shard.table.get(key)
+        return e is not None and e.state is PageState.PRESENT and e.pins == 0
+
+    def _drop_clean(self, shard: _Shard, entry: PageEntry) -> None:
+        """Evict a clean victim — pure metadata, no I/O (shard lock held)."""
+        self.buffer.release(entry.slot)
+        shard.free.append(entry.slot)
+        shard.table.remove(entry)            # sets event: waiters re-fault
+        shard.counters["evictions"] += 1
+        shard.cond.notify_all()
+
+    def _post_shard_clean_locked(self, shard: _Shard, max_pages: int) -> int:
+        """Queue up to ``max_pages`` of this shard's dirty pages for cleaning
+        (shard lock held) — the filler→cleaner backpressure edge."""
+        posted = 0
+        for key in shard.table.resident_keys():
+            e = shard.table.get(key)
+            if (e is not None and e.dirty and e.state is PageState.PRESENT
+                    and e.pins == 0):
+                e.state = PageState.CLEANING
+                e.event.clear()
+                self._clean_q.put(("clean", e))
+                posted += 1
+                if posted >= max_pages:
+                    break
+        return posted
+
+    def _alloc_slot_blocking(self, key: PageKey) -> int:
+        """Get a slot in ``key``'s shard, evicting clean victims when full.
+
+        Read/write decoupling (DESIGN.md §12): on the UMap path this never
+        performs write-back — clean victims are dropped inline (no I/O) and,
+        when only dirty pages remain, they are posted to the cleaner queue
+        and the filler waits on the shard condition until an evictor has
+        cleaned them.  Only ``mmap_compat`` keeps the kernel's coupled
+        behavior (synchronous write-back on the fault path).  May block, so
+        callers must hold no un-installed slots (deadlock-freedom).
+        """
+        shard = self._shard_of(key)
+        inline_writeback = self.config.mmap_compat
         while True:
             victim: Optional[PageEntry] = None
-            with self.lock:
-                slot = self.buffer.try_alloc(key)
+            with self._locked(shard):
+                slot = self._shard_try_alloc(shard, key)
                 if slot is not None:
                     return slot
-                victims = self.policy.pick_victims(1, self._evictable_key)
-                if victims:
-                    victim = self.table.get(victims[0])
-                    victim.state = PageState.EVICTING
-                    victim.event.clear()
-                    self.policy.on_remove(victim.key)
+                # Under pressure, write-back follows eviction order: if the
+                # policy's PREFERRED victim is dirty, hand it to the
+                # cleaners now — even when a clean page lets the fill
+                # proceed — so a dirty page cannot outlive arbitrary
+                # capacity churn un-persisted (the seed's dirty-eviction
+                # semantics, minus the filler doing the write).  CLEANING
+                # state prevents reposting.
+                if not inline_writeback:
+                    top = shard.policy.pick_victims(
+                        1, lambda k: self._any_victim_ok(shard, k))
+                    if top:
+                        e0 = shard.table.get(top[0])
+                        if e0 is not None and e0.dirty \
+                                and e0.state is PageState.PRESENT:
+                            e0.state = PageState.CLEANING
+                            e0.event.clear()
+                            self._clean_q.put(("clean", e0))
+                while True:                       # clean-drop/alloc under ONE hold
+                    victims = shard.policy.pick_victims(
+                        1, lambda k: self._clean_victim_ok(shard, k))
+                    if not victims:
+                        break
+                    e = shard.table.get(victims[0])
+                    shard.policy.on_remove(e.key)
+                    self._drop_clean(shard, e)
+                    slot = self._shard_try_alloc(shard, key)
+                    if slot is not None:
+                        return slot
+                if inline_writeback:
+                    victims = shard.policy.pick_victims(
+                        1, lambda k: self._any_victim_ok(shard, k))
+                    if victims:
+                        victim = shard.table.get(victims[0])
+                        victim.state = PageState.EVICTING
+                        victim.event.clear()
+                        shard.policy.on_remove(victim.key)
+                    else:
+                        shard.cond.wait(timeout=0.1)
+                        continue
                 else:
-                    # Everything pinned/in-flight: wait for a release.
-                    self.cond.wait(timeout=0.1)
+                    # Only dirty/pinned/in-flight pages left: hand dirty ones
+                    # to the cleaners and wait — the read path does not write.
+                    self._post_shard_clean_locked(shard, max_pages=4)
+                    shard.counters["fill_stalls"] += 1
+                    shard.cond.wait(timeout=0.05)
                     continue
-            self._evict_now(victim)
+            if victim is not None:               # mmap baseline only
+                self._evict_now(victim)
 
-    def _evictable_key(self, key: PageKey) -> bool:
-        e = self.table.get(key)
-        return e is not None and self.table.evictable(e)
+    def _try_alloc_slot(self, key: PageKey) -> Optional[int]:
+        """Non-blocking slot allocation: drop clean victims, never wait,
+        never write (batch-fill extras; deadlock-freedom invariant)."""
+        shard = self._shard_of(key)
+        with self._locked(shard):
+            while True:
+                slot = self._shard_try_alloc(shard, key)
+                if slot is not None:
+                    return slot
+                victims = shard.policy.pick_victims(
+                    1, lambda k: self._clean_victim_ok(shard, k))
+                if not victims:
+                    return None
+                e = shard.table.get(victims[0])
+                shard.policy.on_remove(e.key)
+                self._drop_clean(shard, e)
+
+    # ------------------------------------------------ write path (cleaners)
 
     def _evict_now(self, victim: PageEntry) -> None:
-        """Write back (if dirty) and free the victim's slot. Lock not held."""
-        region = self._regions[victim.key[0]]
-        if victim.dirty:
+        """Write back (if dirty) and free the victim's slot.  No locks held.
+
+        Runs on evictor threads, the flush path, or the mmap baseline's
+        faulting thread — never on a UMap filler (read/write decoupling).
+        """
+        region = self._regions.get(victim.key[0])
+        shard = self._shard_of(victim.key)
+        wrote = False
+        if victim.dirty and region is not None:
             nbytes = region.page_nbytes(victim.key[1])
             buf = self.buffer.slot_view(victim.slot, nbytes)
             region.store.write_from(victim.key[1] * region.page_size, buf)
-            self.stats.writebacks += 1
-        with self.lock:
-            self.buffer.free(victim.slot)
-            self.table.remove(victim)
-            self.stats.evictions += 1
-            self.cond.notify_all()
-
-    # ------------------------------------------------------- evict workers
+            wrote = True
+        with self._locked(shard):
+            if wrote:
+                shard.counters["writebacks"] += 1
+            self.buffer.release(victim.slot)
+            shard.free.append(victim.slot)
+            shard.table.remove(victim)
+            shard.counters["evictions"] += 1
+            shard.cond.notify_all()
 
     def _evictor_loop(self, worker_id: int) -> None:
         while True:
-            work = self._evict_q.get()
+            work = self._clean_q.get()
             if work is _SHUTDOWN:
                 return
             kind, payload = work
@@ -567,34 +1051,38 @@ class PagingService:
     def _do_clean(self, entry: PageEntry) -> None:
         """Write a dirty page back to its store; page stays resident."""
         region = self._regions.get(entry.key[0])
-        if region is None:
+        shard = self._shard_of(entry.key)
+        if region is None:                        # unregistered mid-flight
+            with self._locked(shard):
+                if shard.table.get(entry.key) is entry:
+                    self.buffer.release(entry.slot)
+                    shard.free.append(entry.slot)
+                    shard.table.remove(entry)
+                entry.event.set()
+                shard.cond.notify_all()
             return
         nbytes = region.page_nbytes(entry.key[1])
         buf = self.buffer.slot_view(entry.slot, nbytes)
         region.store.write_from(entry.key[1] * region.page_size, buf)
-        with self.lock:
+        with self._locked(shard):
             if entry.state is PageState.CLEANING:
                 entry.state = PageState.PRESENT
-            self.table.mark_clean(entry)
-            self.stats.writebacks += 1
+            shard.table.mark_clean(entry)
+            shard.counters["writebacks"] += 1
             entry.event.set()
-            self.cond.notify_all()
+            shard.cond.notify_all()
 
     def submit_clean_batch(self, max_pages: int) -> int:
         """Queue up to ``max_pages`` dirty pages for write-back (watermarks)."""
         posted = 0
-        with self.lock:
-            for key in self.table.resident_keys():
-                e = self.table.get(key)
-                if e is not None and e.dirty and e.state is PageState.PRESENT:
-                    e.state = PageState.CLEANING
-                    e.event.clear()
-                    self._evict_q.put(("clean", e))
-                    posted += 1
-                    if posted >= max_pages:
-                        break
-            if posted:
-                self.stats.watermark_flushes += 1
+        for shard in self.shards:
+            if posted >= max_pages:
+                break
+            with self._locked(shard):
+                posted += self._post_shard_clean_locked(
+                    shard, max_pages - posted)
+        if posted:
+            self._svc["watermark_flushes"] += 1
         return posted
 
     # -------------------------------------------------------------- flush
@@ -602,28 +1090,32 @@ class PagingService:
     def flush_region(self, region: "UMapRegion", evict: bool = False) -> None:
         """Synchronously write back all dirty pages of a region (§3.5).
 
-        With ``evict=True`` also drops the pages (uunmap path).
+        With ``evict=True`` also drops the pages (uunmap path).  Loops until
+        no page of the region is dirty/resident (evict) and none is in
+        flight — combined with the region's closing gate this guarantees no
+        fill can re-install a page after an unregister flush returns.
         """
         while True:
             batch: List[PageEntry] = []
-            with self.lock:
-                for e in self.table.region_entries(region.region_id):
-                    if e.state is PageState.PRESENT and (e.dirty or evict) and e.pins == 0:
-                        e.state = PageState.EVICTING if evict else PageState.CLEANING
-                        e.event.clear()
-                        if evict:
-                            self.policy.on_remove(e.key)
-                        batch.append(e)
-                pending = any(
-                    e.state in (PageState.FILLING, PageState.CLEANING, PageState.EVICTING)
-                    or e.pins > 0
-                    for e in self.table.region_entries(region.region_id)
-                ) if not batch else True
+            pending = False
+            for shard in self.shards:
+                with self._locked(shard):
+                    for e in shard.table.region_entries(region.region_id):
+                        if (e.state is PageState.PRESENT
+                                and (e.dirty or evict) and e.pins == 0):
+                            e.state = (PageState.EVICTING if evict
+                                       else PageState.CLEANING)
+                            e.event.clear()
+                            if evict:
+                                shard.policy.on_remove(e.key)
+                            batch.append(e)
+                        elif (e.state in (PageState.FILLING, PageState.CLEANING,
+                                          PageState.EVICTING) or e.pins > 0):
+                            pending = True
             if not batch:
                 if not pending:
                     break
-                import time as _t
-                _t.sleep(0.001)
+                time.sleep(0.001)
                 continue
             for e in batch:
                 if evict:
@@ -635,11 +1127,15 @@ class PagingService:
     # ------------------------------------------------------------- queries
 
     def dirty_ratio(self) -> float:
-        with self.lock:
-            return self.table.dirty_count / max(1, self.buffer.num_slots)
+        return self.table.dirty_count / max(1, self.buffer.num_slots)
 
     def resident_pages(self, region_id: Optional[int] = None) -> int:
-        with self.lock:
-            if region_id is None:
-                return len(self.table.resident_keys())
-            return sum(1 for (rid, _) in self.table.resident_keys() if rid == region_id)
+        total = 0
+        for shard in self.shards:
+            with self._locked(shard):
+                if region_id is None:
+                    total += len(shard.table.resident_keys())
+                else:
+                    total += sum(1 for (rid, _) in shard.table.resident_keys()
+                                 if rid == region_id)
+        return total

@@ -11,14 +11,17 @@ Page life-cycle::
                                    (dirty) CLEANING  (write-back, stays resident)
 
 The table itself is not thread-safe; the owning service serializes metadata
-mutations under one lock and performs I/O outside it.
+mutations under a lock and performs I/O outside it.  Since the sharded
+refactor (DESIGN.md §12) a service holds one :class:`PageTable` *per shard*,
+each guarded by that shard's lock; :class:`ShardedPageTableView` is the
+read-mostly aggregate exposed as ``service.table`` for telemetry and tests.
 """
 
 from __future__ import annotations
 
 import enum
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 PageKey = Tuple[int, int]  # (region_id, page_no)
 
@@ -93,11 +96,53 @@ class PageTable:
         del self._entries[entry.key]
         entry.event.set()
 
+    # list(dict.items()) snapshots atomically under the GIL, so these stay
+    # safe even when an aggregate view reads a table owned by another shard.
+
     def resident_keys(self):
-        return [k for k, e in self._entries.items() if e.state is PageState.PRESENT]
+        return [k for k, e in list(self._entries.items())
+                if e.state is PageState.PRESENT]
 
     def evictable(self, entry: PageEntry) -> bool:
         return entry.state is PageState.PRESENT and entry.pins == 0
 
     def region_entries(self, region_id: int):
-        return [e for k, e in self._entries.items() if k[0] == region_id]
+        return [e for k, e in list(self._entries.items()) if k[0] == region_id]
+
+
+class ShardedPageTableView:
+    """Aggregate read view over per-shard page tables (``service.table``).
+
+    Mutation always goes through the owning shard under that shard's lock;
+    this view is for telemetry, tests, and the watermark monitor.  Reads are
+    lock-free — per-table counters are GIL-consistent ints and iteration
+    snapshots each table — so values may be momentarily stale across shards
+    but are exact whenever the service is quiescent.
+    """
+
+    def __init__(self, tables: Sequence[PageTable],
+                 shard_index: Callable[[PageKey], int]):
+        self._tables: List[PageTable] = list(tables)
+        self._shard_index = shard_index
+
+    def __len__(self) -> int:
+        return sum(len(t) for t in self._tables)
+
+    @property
+    def dirty_count(self) -> int:
+        return sum(t.dirty_count for t in self._tables)
+
+    def get(self, key: PageKey) -> Optional[PageEntry]:
+        return self._tables[self._shard_index(key)].get(key)
+
+    def resident_keys(self) -> List[PageKey]:
+        out: List[PageKey] = []
+        for t in self._tables:
+            out.extend(t.resident_keys())
+        return out
+
+    def region_entries(self, region_id: int) -> List[PageEntry]:
+        out: List[PageEntry] = []
+        for t in self._tables:
+            out.extend(t.region_entries(region_id))
+        return out

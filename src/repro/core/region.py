@@ -57,6 +57,10 @@ class UMapRegion:
         self.hint_pinned = readahead_pages is not None
         self.advice: Optional["AccessAdvice"] = None
         self.detected_stride = 1   # classifier-detected fault stride
+        # Closing gate (DESIGN.md §12): set by unregister() *before* the
+        # evicting flush.  New faults raise, queued fills are abandoned, so
+        # no fill can re-install a page after the region is dropped.
+        self._closing = False
         self.region_id = service.register(self)
         self._closed = False
         # mmap-compat heuristic readahead state (sequential-streak detector)
@@ -93,20 +97,25 @@ class UMapRegion:
             return out
         pages = self._page_range(offset, nbytes)
         self._mmap_heuristic_readahead(pages)
-        # Post all fills up front (I/O overlap), then pin/copy one at a time
-        # (deadlock-freedom: at most one pin per thread).
+        # Post all fills up front (I/O overlap), then copy one page at a
+        # time.  The fast path copies under the page's stripe lock (one
+        # acquisition); only pages still in flight fall back to the pinning
+        # fault path (deadlock-freedom: at most one pin per thread).
         self.service.request_fills(self, pages)
         pos = 0
         for pno in pages:
             page_lo = pno * self.page_size
             lo = max(offset, page_lo)
             hi = min(offset + nbytes, page_lo + self.page_nbytes(pno))
-            e = self.service.acquire_one(self, pno)
-            try:
-                slot = self.service.buffer.slot_view(e.slot, self.service.buffer.slot_size)
-                out[pos : pos + (hi - lo)] = slot[lo - page_lo : hi - page_lo]
-            finally:
-                self.service.release_one(e)
+            dst = out[pos : pos + (hi - lo)]
+            if not self.service.copy_page_out(self, pno, lo - page_lo, dst):
+                e = self.service.acquire_one(self, pno)
+                try:
+                    slot = self.service.buffer.slot_view(
+                        e.slot, self.service.buffer.slot_size)
+                    dst[:] = slot[lo - page_lo : hi - page_lo]
+                finally:
+                    self.service.release_one(e)
             pos += hi - lo
         return out
 
@@ -123,13 +132,18 @@ class UMapRegion:
             page_lo = pno * self.page_size
             lo = max(offset, page_lo)
             hi = min(offset + src.nbytes, page_lo + self.page_nbytes(pno))
-            e = self.service.acquire_one(self, pno)
-            try:
-                slot = self.service.buffer.slot_view(e.slot, self.service.buffer.slot_size)
-                slot[lo - page_lo : hi - page_lo] = src[pos : pos + (hi - lo)]
-                self.service.mark_dirty_one(e)
-            finally:
-                self.service.release_one(e)
+            chunk = src[pos : pos + (hi - lo)]
+            if self.service.copy_page_in(self, pno, lo - page_lo, chunk):
+                self.service.watermark.poke()
+            else:
+                e = self.service.acquire_one(self, pno)
+                try:
+                    slot = self.service.buffer.slot_view(
+                        e.slot, self.service.buffer.slot_size)
+                    slot[lo - page_lo : hi - page_lo] = chunk
+                    self.service.mark_dirty_one(e)
+                finally:
+                    self.service.release_one(e)
             pos += hi - lo
 
     # ------------------------------------------------------------- hints

@@ -10,6 +10,13 @@ This gives applications explicit control over when persistence I/O happens —
 the paper's motivation being that kernel-initiated flushing (RHEL: at 10%
 dirty) causes jitter and breaks multi-page atomicity expectations.  The same
 monitor drives the asynchronous checkpoint flusher in ``repro.ckpt``.
+
+Since the sharded refactor (DESIGN.md §12) this monitor is the *backpressure
+driver* of the decoupled write path: all watermark write-back flows through
+the service's dedicated cleaner queue (``submit_clean_batch``), which is the
+only path that writes — fillers never do.  Dirty accounting is read
+lock-free (per-shard ``dirty_count`` ints are GIL-consistent); a slightly
+stale ratio only shifts a flush batch by one poll interval.
 """
 
 from __future__ import annotations
@@ -61,7 +68,6 @@ class WatermarkMonitor:
                 # Flush down toward the low watermark in bounded batches so
                 # evictors stay busy without monopolizing the queue.
                 target_dirty = int(cfg.evict_low_water * self.service.buffer.num_slots)
-                with self.service.lock:
-                    excess = self.service.table.dirty_count - target_dirty
+                excess = self.service.table.dirty_count - target_dirty
                 if excess > 0:
                     self.service.submit_clean_batch(excess)

@@ -18,7 +18,9 @@ indirection in-kernel); installs/evictions use kernels/page_gather
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -54,7 +56,17 @@ class PagedKVConfig:
 
 
 class PagedKVCache:
-    """Host-managed page tables over device-resident pools."""
+    """Host-managed page tables over device-resident pools.
+
+    Host-side metadata (allocator free list, per-sequence lengths, dropped
+    prefixes, classifiers) is guarded by one lock so serving-engine worker
+    threads can admit/append/release sequences concurrently; contended
+    acquisitions are counted (``stats()["host_lock_contended"]``) with the
+    same try-then-block idiom as the core's shard locks (DESIGN.md §12).
+    Device pool updates are functional jnp ops and need no locking, but
+    callers must not interleave ``append_token`` for the SAME sequence from
+    two threads (per-sequence ordering is the engine's contract).
+    """
 
     def __init__(self, cfg: PagedKVConfig):
         self.cfg = cfg
@@ -70,6 +82,19 @@ class PagedKVCache:
         self.pages_dropped: Dict[int, int] = {}
         self._classifiers: Dict[int, AccessPatternClassifier] = {}
         self.auto_evicted_pages = 0
+        self._meta_lock = threading.Lock()
+        self._meta_contended = 0
+
+    @contextlib.contextmanager
+    def _locked_meta(self):
+        """Acquire the host-metadata lock, counting contended acquisitions."""
+        if not self._meta_lock.acquire(blocking=False):
+            self._meta_lock.acquire()
+            self._meta_contended += 1
+        try:
+            yield
+        finally:
+            self._meta_lock.release()
 
     # ------------------------------------------------------------- sequences
 
@@ -78,32 +103,38 @@ class PagedKVCache:
         S = k.shape[1]
         ps = self.cfg.page_size
         n_pages = -(-S // ps)
-        pages = self.allocator.alloc(seq_id, n_pages)
         pad = n_pages * ps - S
         if pad:
             k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
             v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kp = k.reshape(k.shape[0], n_pages, ps, *k.shape[2:])
         vp = v.reshape(v.shape[0], n_pages, ps, *v.shape[2:])
-        idx = jnp.asarray(pages, jnp.int32)
-        self.k_pool = self.k_pool.at[:, idx].set(kp.astype(self.k_pool.dtype))
-        self.v_pool = self.v_pool.at[:, idx].set(vp.astype(self.v_pool.dtype))
-        self.seq_len[seq_id] = S
+        # Pool updates stay under the lock: the functional
+        # ``pool = pool.at[...].set(...)`` read-modify-write would lose a
+        # concurrent writer's pages otherwise (dispatch is async, so the
+        # hold is short).
+        with self._locked_meta():
+            pages = self.allocator.alloc(seq_id, n_pages)
+            idx = jnp.asarray(pages, jnp.int32)
+            self.k_pool = self.k_pool.at[:, idx].set(kp.astype(self.k_pool.dtype))
+            self.v_pool = self.v_pool.at[:, idx].set(vp.astype(self.v_pool.dtype))
+            self.seq_len[seq_id] = S
 
     def append_token(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
         """Append one token.  k/v: [L, KVH, D].  Allocates a page on boundary."""
-        pos = self.seq_len[seq_id]
         ps = self.cfg.page_size
-        if pos % ps == 0:
-            self.allocator.alloc(seq_id, 1)
-        page = self.allocator.pages_of(seq_id)[
-            pos // ps - self.pages_dropped.get(seq_id, 0)]
-        slot = pos % ps
-        self.k_pool = self.k_pool.at[:, page, slot].set(k.astype(self.k_pool.dtype))
-        self.v_pool = self.v_pool.at[:, page, slot].set(v.astype(self.v_pool.dtype))
-        self.seq_len[seq_id] = pos + 1
+        with self._locked_meta():
+            pos = self.seq_len[seq_id]
+            if pos % ps == 0:
+                self.allocator.alloc(seq_id, 1)
+            page = self.allocator.pages_of(seq_id)[
+                pos // ps - self.pages_dropped.get(seq_id, 0)]
+            slot = pos % ps
+            self.k_pool = self.k_pool.at[:, page, slot].set(k.astype(self.k_pool.dtype))
+            self.v_pool = self.v_pool.at[:, page, slot].set(v.astype(self.v_pool.dtype))
+            self.seq_len[seq_id] = pos + 1
         if pos % ps == 0:               # observe at page granularity
-            self._observe(seq_id, pos // ps)
+            self._observe(seq_id, pos // ps)    # outside the lock: may evict
 
     def _observe(self, seq_id: int, page_idx: int) -> None:
         """Adaptive opt-in: feed the sequence's page-touch stream (DESIGN.md §8).
@@ -114,18 +145,21 @@ class PagedKVCache:
         """
         if not self.cfg.adaptive:
             return
-        clf = self._classifiers.get(seq_id)
-        if clf is None:
-            clf = self._classifiers[seq_id] = AccessPatternClassifier(
-                window=16, min_samples=4, interval=2, hysteresis=2)
+        with self._locked_meta():
+            clf = self._classifiers.get(seq_id)
+            if clf is None:
+                clf = self._classifiers[seq_id] = AccessPatternClassifier(
+                    window=16, min_samples=4, interval=2, hysteresis=2)
         clf.observe(page_idx)
         # once the phase is confirmed SEQUENTIAL, keep the prefix trimmed as
         # the sequence advances (evict_window_prefix is a no-op when nothing
         # is fully behind the window)
         if (self.cfg.attention_window is not None
                 and clf.phase is Phase.SEQUENTIAL):
-            self.auto_evicted_pages += len(
-                self.evict_window_prefix(seq_id, self.cfg.attention_window))
+            freed = self.evict_window_prefix(seq_id, self.cfg.attention_window)
+            if freed:
+                with self._locked_meta():   # += is a read-modify-write
+                    self.auto_evicted_pages += len(freed)
 
     def detected_phase(self, seq_id: int) -> Optional[str]:
         """Telemetry: the classifier's phase for one sequence (None if off)."""
@@ -133,22 +167,24 @@ class PagedKVCache:
         return None if clf is None else clf.snapshot()["phase"]
 
     def release(self, seq_id: int) -> int:
-        self.seq_len.pop(seq_id, None)
-        self.pages_dropped.pop(seq_id, None)
-        self._classifiers.pop(seq_id, None)
-        return self.allocator.free_seq(seq_id)
+        with self._locked_meta():
+            self.seq_len.pop(seq_id, None)
+            self.pages_dropped.pop(seq_id, None)
+            self._classifiers.pop(seq_id, None)
+            return self.allocator.free_seq(seq_id)
 
     def evict_window_prefix(self, seq_id: int, window: int) -> List[int]:
         """Sliding-window policy: free pages fully behind the window."""
         ps = self.cfg.page_size
-        keep_from = max(0, self.seq_len.get(seq_id, 0) - window)
-        dropped = self.pages_dropped.get(seq_id, 0)
-        evictable = keep_from // ps - dropped
-        if evictable <= 0:
-            return []
-        freed = self.allocator.free_prefix(seq_id, evictable)
-        self.pages_dropped[seq_id] = dropped + len(freed)
-        return freed
+        with self._locked_meta():
+            keep_from = max(0, self.seq_len.get(seq_id, 0) - window)
+            dropped = self.pages_dropped.get(seq_id, 0)
+            evictable = keep_from // ps - dropped
+            if evictable <= 0:
+                return []
+            freed = self.allocator.free_prefix(seq_id, evictable)
+            self.pages_dropped[seq_id] = dropped + len(freed)
+            return freed
 
     # ------------------------------------------------------------- attention
 
@@ -161,13 +197,14 @@ class PagedKVCache:
         on prefix-evicted sequences.)"""
         mp = self.cfg.max_pages_per_seq
         rows = []
-        for s in seq_ids:
-            d = self.pages_dropped.get(s, 0)
-            pages = self.allocator.pages_of(s)
-            row = np.zeros(mp, np.int32)
-            row[d : d + len(pages)] = pages[: max(0, mp - d)]
-            rows.append(row)
-        lengths = [self.seq_len.get(s, 0) for s in seq_ids]
+        with self._locked_meta():   # consistent rows vs concurrent evict/append
+            for s in seq_ids:
+                d = self.pages_dropped.get(s, 0)
+                pages = self.allocator.pages_of(s)
+                row = np.zeros(mp, np.int32)
+                row[d : d + len(pages)] = pages[: max(0, mp - d)]
+                rows.append(row)
+            lengths = [self.seq_len.get(s, 0) for s in seq_ids]
         return (jnp.asarray(np.stack(rows), jnp.int32),
                 jnp.asarray(lengths, jnp.int32))
 
@@ -181,16 +218,18 @@ class PagedKVCache:
     # ------------------------------------------------------------- telemetry
 
     def stats(self) -> dict:
-        return {
-            "pages_used": self.allocator.used_pages,
-            "pages_free": self.allocator.free_pages,
-            "occupancy": self.allocator.occupancy(),
-            "page_bytes": self.cfg.page_bytes,
-            "sequences": len(self.seq_len),
-            "auto_evicted_pages": self.auto_evicted_pages,
-            "phases": {s: c.snapshot()["phase"]
-                       for s, c in self._classifiers.items()},
-        }
+        with self._locked_meta():   # _classifiers/seq_len mutate concurrently
+            return {
+                "pages_used": self.allocator.used_pages,
+                "pages_free": self.allocator.free_pages,
+                "occupancy": self.allocator.occupancy(),
+                "page_bytes": self.cfg.page_bytes,
+                "sequences": len(self.seq_len),
+                "auto_evicted_pages": self.auto_evicted_pages,
+                "host_lock_contended": self._meta_contended,
+                "phases": {s: c.snapshot()["phase"]
+                           for s, c in self._classifiers.items()},
+            }
 
 
 class ContiguousKVCache:

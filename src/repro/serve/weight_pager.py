@@ -14,15 +14,18 @@ AccessPatternClassifier, and the readahead depth follows the detected phase
 random (e.g. speculative-decode layer skipping) so slots are not wasted on
 layers that will not be used.
 
-Filler concurrency is real: transfers are issued by a worker thread through
-``jax.device_put`` (async under JAX's dispatch), overlapping host->device
-copies with the consumer's compute.
+Filler concurrency mirrors the sharded core (DESIGN.md §12): ``num_fillers``
+worker threads, each with its OWN deque + condition, route transfers by
+layer index; an idle filler steals from the busiest peer, so a burst of
+prefetches for far-apart layers overlaps host->device copies
+(``jax.device_put`` is async under JAX's dispatch).  The default of one
+filler preserves strictly ordered installs for the streaming case.
 """
 
 from __future__ import annotations
 
-import queue
 import threading
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -35,8 +38,10 @@ PyTree = Any
 
 class LayerWeightPager:
     def __init__(self, host_layers: List[PyTree], num_slots: int = 4,
-                 readahead: int = 2, device=None, adaptive: bool = False):
+                 readahead: int = 2, device=None, adaptive: bool = False,
+                 num_fillers: int = 1):
         assert num_slots >= readahead + 1
+        assert num_fillers >= 1
         self.host_layers = host_layers
         self.num_layers = len(host_layers)
         self.num_slots = num_slots
@@ -46,23 +51,73 @@ class LayerWeightPager:
         self._order: List[int] = []                  # FIFO residency (stream)
         self._events: Dict[int, threading.Event] = {}
         self._lock = threading.Lock()
-        self._q: "queue.Queue" = queue.Queue()
         self._classifier = (AccessPatternClassifier(
             window=16, min_samples=4, interval=2, hysteresis=2)
             if adaptive else None)
-        self._filler = threading.Thread(target=self._fill_loop, daemon=True,
-                                        name="weight-pager-filler")
-        self._filler.start()
         self.stats = {"fills": 0, "hits": 0, "waits": 0, "evictions": 0,
-                      "pattern_transitions": 0}
+                      "pattern_transitions": 0, "steals": 0}
+        # Per-filler deques + stealing (the core's §3.3 protocol in
+        # miniature): each deque has its own condition — no global queue
+        # lock.  Never hold two deque conditions at once.
+        self._qs: List[deque] = [deque() for _ in range(num_fillers)]
+        self._cvs: List[threading.Condition] = [
+            threading.Condition() for _ in range(num_fillers)]
+        self._shutdown = False
+        self._fillers = [
+            threading.Thread(target=self._fill_loop, args=(i,), daemon=True,
+                             name=f"weight-pager-filler-{i}")
+            for i in range(num_fillers)
+        ]
+        for t in self._fillers:
+            t.start()
 
     # ------------------------------------------------------------- pager
 
-    def _fill_loop(self) -> None:
+    def _steal(self, worker_id: int) -> bool:
+        victim = -1
+        victim_len = 0
+        for i, q in enumerate(self._qs):
+            if i != worker_id and len(q) > victim_len:
+                victim, victim_len = i, len(q)
+        if victim < 0:
+            return False
+        stolen: List[int] = []
+        with self._cvs[victim]:
+            vq = self._qs[victim]
+            for _ in range(max(1, len(vq) // 2)):
+                if not vq:
+                    break
+                stolen.append(vq.pop())
+        if not stolen:
+            return False
+        stolen.reverse()
+        with self._cvs[worker_id]:
+            self._qs[worker_id].extend(stolen)
+        with self._lock:
+            self.stats["steals"] += 1
+        return True
+
+    def _fill_loop(self, worker_id: int) -> None:
+        dq = self._qs[worker_id]
+        cv = self._cvs[worker_id]
+        idle_wait = 0.01       # steal-rescan backoff, as in the core pager
         while True:
-            layer = self._q.get()
-            if layer is None:
-                return
+            layer: Optional[int] = None
+            while layer is None:
+                with cv:
+                    if not dq and not self._shutdown:
+                        cv.wait(timeout=idle_wait)
+                    if dq:
+                        layer = dq.popleft()
+                if layer is None:
+                    if self._steal(worker_id):
+                        idle_wait = 0.01
+                        continue
+                    if self._shutdown:
+                        return
+                    idle_wait = min(idle_wait * 2, 0.5)
+                else:
+                    idle_wait = 0.01
             with self._lock:
                 if layer in self._slots or layer in self._events and \
                         self._events[layer].is_set():
@@ -86,10 +141,17 @@ class LayerWeightPager:
                 if layer in self._slots or layer in self._events:
                     return
                 self._events[layer] = threading.Event()
-            self._q.put(layer)
+            route = layer % len(self._qs)
+            with self._cvs[route]:
+                self._qs[route].append(layer)
+                self._cvs[route].notify()
 
     def get(self, layer: int) -> PyTree:
         """Block until layer resident; issues readahead for the next layers."""
+        if not 0 <= layer < self.num_layers:
+            # prefetch() silently ignores out-of-range layers, so without
+            # this the retry loop below would spin forever
+            raise IndexError(f"layer {layer} out of range [0, {self.num_layers})")
         if self._classifier is not None:
             d = self._classifier.observe(layer)
             if d is not None:
@@ -98,20 +160,23 @@ class LayerWeightPager:
                 self.stats["pattern_transitions"] += 1
         for ahead in range(1, self.readahead + 1):
             self.prefetch(layer + ahead)
-        with self._lock:
-            tree = self._slots.get(layer)
-            ev = self._events.get(layer)
-        if tree is not None:
-            self.stats["hits"] += 1
-            return tree
-        if ev is None:
-            self.prefetch(layer)
+        # Re-check after every wake: with num_fillers > 1 the layer can be
+        # installed AND evicted (out-of-order installs overflowing the ring)
+        # between the filler's event set and this thread being scheduled,
+        # so a single wait-then-index would KeyError.
+        waited = False
+        while True:
             with self._lock:
-                ev = self._events[layer]
-        self.stats["waits"] += 1
-        ev.wait()
-        with self._lock:
-            return self._slots[layer]
+                tree = self._slots.get(layer)
+                ev = self._events.get(layer)
+            if tree is not None:
+                self.stats["waits" if waited else "hits"] += 1
+                return tree
+            if ev is None:                 # never requested, or evicted: retry
+                self.prefetch(layer)
+            else:
+                waited = True
+                ev.wait(timeout=0.05)
 
     def run(self, x, apply_fn: Callable[[PyTree, Any, int], Any]):
         """Stream x through all layers: apply_fn(layer_params, x, i)."""
@@ -121,5 +186,9 @@ class LayerWeightPager:
         return x
 
     def close(self) -> None:
-        self._q.put(None)
-        self._filler.join(timeout=5)
+        self._shutdown = True
+        for cv in self._cvs:
+            with cv:
+                cv.notify_all()
+        for t in self._fillers:
+            t.join(timeout=5)

@@ -1,0 +1,357 @@
+"""Sharded concurrency architecture (DESIGN.md §12).
+
+Covers: shard configuration (auto heuristic, clamping, env parity,
+mmap_compat pinning), the multi-threaded fault storm (no lost wakeups, no
+double install, byte-exact reads under eviction pressure), work stealing
+between filler deques, read/write decoupling (fillers never call
+``write_from``), the ``flush_region(evict=True)`` vs concurrent-fill
+regression, and per-shard stats aggregation.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    HostArrayStore,
+    PagingService,
+    RemoteStore,
+    SyntheticStore,
+    UMapConfig,
+    umap,
+    uunmap,
+)
+
+
+def _pattern_gen(offset: int, buf: np.ndarray) -> None:
+    """Deterministic synthetic contents: byte i of the space is (i % 251)."""
+    n = buf.nbytes
+    buf[:] = (np.arange(offset, offset + n, dtype=np.int64) % 251).astype(np.uint8)
+
+
+# ------------------------------------------------------------- configuration
+
+
+def test_shards_auto_heuristic_and_clamps():
+    cfg = UMapConfig(page_size=4096, buffer_size=64 * 4096, num_fillers=4,
+                     num_evictors=1)
+    assert cfg.shards == 0
+    assert cfg.effective_shards == 8          # min(16, 2*4), 64 slots available
+    cfg = cfg.replace(num_fillers=32)
+    assert cfg.effective_shards == 16         # capped at 16
+    tiny = UMapConfig(page_size=4096, buffer_size=3 * 4096, num_fillers=8,
+                      num_evictors=1)
+    # clamped: stripes with <MIN_SLOTS_PER_SHARD slots would thrash their
+    # private free lists, so a 3-slot buffer collapses to one stripe
+    assert tiny.effective_shards == 1
+    small = UMapConfig(page_size=4096, buffer_size=16 * 4096, shards=16,
+                       num_evictors=1)
+    assert small.effective_shards == 16 // UMapConfig.MIN_SLOTS_PER_SHARD
+    explicit = UMapConfig(page_size=4096, buffer_size=64 * 4096, shards=5,
+                          num_evictors=1)
+    assert explicit.effective_shards == 5
+    with pytest.raises(ValueError):
+        UMapConfig(shards=-1)
+
+
+def test_shards_env_parity():
+    cfg = UMapConfig.from_env(env={"UMAP_SHARDS": "7",
+                                   "UMAP_BUFSIZE": str(64 * 4096)})
+    assert cfg.shards == 7 and cfg.effective_shards == 7
+
+
+def test_mmap_compat_single_shard():
+    cfg = UMapConfig.mmap_baseline(buffer_size=64 * 4096)
+    assert cfg.effective_shards == 1
+    r = umap(HostArrayStore(np.zeros(16 * 4096, np.uint8)), config=cfg)
+    try:
+        assert len(r.service.shards) == 1
+        assert r.stats()["shards"] == 1
+    finally:
+        uunmap(r)
+
+
+def test_service_instantiates_shards_with_disjoint_slots():
+    cfg = UMapConfig(page_size=4096, buffer_size=64 * 4096, num_fillers=4,
+                     num_evictors=1, shards=8)
+    svc = PagingService(cfg)
+    try:
+        assert len(svc.shards) == 8
+        all_slots = [s for shard in svc.shards for s in shard.free]
+        assert sorted(all_slots) == list(range(64))      # disjoint, complete
+        st = svc.stats
+        assert st.shards == 8 and len(st.per_shard) == 8
+        assert set(st.per_shard[0]) >= {"demand_faults", "lock_contended",
+                                        "fill_stalls", "evictions"}
+    finally:
+        svc.close()
+
+
+# --------------------------------------------------------------- fault storm
+
+
+@pytest.mark.slow
+def test_fault_storm_byte_exact_under_eviction_pressure():
+    """N threads × random+strided faults: no lost wakeups, no double
+    install, byte-exact reads, buffer invariants hold (satellite task)."""
+    npages, ps, slots = 512, 4096, 64
+    store = SyntheticStore(npages * ps, _pattern_gen)
+    cfg = UMapConfig(page_size=ps, buffer_size=slots * ps, num_fillers=8,
+                     num_evictors=2, shards=8)
+    r = umap(store, config=cfg)
+    errors = []
+    barrier = threading.Barrier(8)
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        barrier.wait()
+        for i in range(250):
+            if i % 3 == 0:                    # strided component
+                pno = (seed * 37 + i * 7) % npages
+            else:                             # random component
+                pno = int(rng.integers(0, npages))
+            off = pno * ps + int(rng.integers(0, ps - 64))
+            got = r.read(off, 64)
+            want = (np.arange(off, off + 64, dtype=np.int64) % 251).astype(np.uint8)
+            if not np.array_equal(got, want):
+                errors.append((pno, off))
+                return
+
+    try:
+        ts = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+        [t.start() for t in ts]
+        [t.join(timeout=60) for t in ts]
+        assert not any(t.is_alive() for t in ts), "storm thread hung (lost wakeup?)"
+        assert not errors, f"inconsistent reads at {errors[:5]}"
+        st = r.stats()
+        assert st["demand_faults"] > 0
+        assert r.service.buffer.used_slots <= slots
+        assert 0 <= r.service.table.dirty_count <= slots
+    finally:
+        uunmap(r)
+
+
+def test_storm_mixed_writers_and_readers_consistent():
+    """Writers own disjoint page ranges; readers verify; flush round-trips."""
+    npages, ps = 64, 4096
+    base = (np.arange(npages * ps) % 251).astype(np.uint8)
+    store = HostArrayStore(base.copy())
+    cfg = UMapConfig(page_size=ps, buffer_size=16 * ps, num_fillers=4,
+                     num_evictors=2, shards=8,
+                     evict_high_water=0.5, evict_low_water=0.25)
+    r = umap(store, config=cfg)
+    errors = []
+
+    def writer(tid):
+        lo = tid * 16                          # disjoint 16-page ranges
+        for i in range(40):
+            pno = lo + (i % 16)
+            r.write(pno * ps, np.full(256, 100 + tid, np.uint8))
+
+    def reader(tid):
+        rng = np.random.default_rng(tid)
+        for _ in range(80):
+            pno = int(rng.integers(0, npages))
+            got = r.read(pno * ps + 512, 64)    # offset 512: never written
+            want = base[pno * ps + 512 : pno * ps + 576]
+            if not np.array_equal(got, want):
+                errors.append(pno)
+                return
+
+    try:
+        ts = ([threading.Thread(target=writer, args=(t,)) for t in range(4)]
+              + [threading.Thread(target=reader, args=(t,)) for t in range(4)])
+        [t.start() for t in ts]
+        [t.join(timeout=60) for t in ts]
+        assert not any(t.is_alive() for t in ts), "mixed storm hung"
+        assert not errors, f"reader saw torn data on pages {errors[:5]}"
+        r.flush()
+        for tid in range(4):
+            chk = np.empty(256, np.uint8)
+            store.read_into(tid * 16 * ps, chk)
+            assert (chk == 100 + tid).all(), "write-back lost a dirty page"
+    finally:
+        uunmap(r)
+
+
+# ------------------------------------------------------------- work stealing
+
+
+def test_work_stealing_rebalances_one_hot_deque():
+    """All fills route to one granule (one deque); with slow I/O the other
+    fillers must steal — §3.3 dynamic load balancing as a protocol."""
+    npages, ps = 64, 4096
+    inner = HostArrayStore((np.arange(npages * ps) % 251).astype(np.uint8))
+    store = RemoteStore(inner, latency_s=2e-3, bandwidth_Bps=1e9)
+    store.batch_read_hint = 1                  # forbid coalescing: 64 singles
+    cfg = UMapConfig(page_size=ps, buffer_size=npages * ps, num_fillers=4,
+                     num_evictors=1, max_batch_pages=64, shards=8)
+    r = umap(store, config=cfg)
+    try:
+        # One granule (64 pages // max_batch_pages=64) => one routed deque.
+        r.service.request_fills(r, list(range(npages)))
+        for pno in range(npages):
+            got = r.read(pno * ps, 64)
+            assert got[0] == (pno * ps) % 251
+        st = r.stats()
+        assert st["steals"] >= 1, f"idle fillers never stole: {st}"
+        assert st["stolen_work"] >= 1
+        assert len(st["per_filler_fills"]) >= 2, \
+            f"stealing engaged only one filler: {st['per_filler_fills']}"
+    finally:
+        uunmap(r)
+
+
+def test_steal_preserves_coalescible_order():
+    """Stolen runs stay in ascending order, so the thief can still batch."""
+    npages, ps = 128, 4096
+    inner = HostArrayStore((np.arange(npages * ps) % 251).astype(np.uint8))
+    store = RemoteStore(inner, latency_s=1e-3, bandwidth_Bps=1e9)
+    cfg = UMapConfig(page_size=ps, buffer_size=npages * ps, num_fillers=4,
+                     num_evictors=1, max_batch_pages=128, shards=8)
+    r = umap(store, config=cfg)
+    try:
+        out = r.read(0, npages * ps)
+        assert np.array_equal(
+            out, (np.arange(npages * ps) % 251).astype(np.uint8))
+        st = r.stats()
+        assert st["coalesced_pages"] >= st["coalesced_fills"] >= 1
+    finally:
+        uunmap(r)
+
+
+# ------------------------------------------------------ read/write decoupling
+
+
+class _ThreadLoggingStore(HostArrayStore):
+    """Records which thread issued every write_from (decoupling witness)."""
+
+    def __init__(self, data):
+        super().__init__(data)
+        self.write_threads = []
+
+    def write_from(self, offset, buf):
+        self.write_threads.append(threading.current_thread().name)
+        return super().write_from(offset, buf)
+
+
+def test_fillers_never_write_dirty_pages_drain_via_cleaners():
+    """A write-back burst must be served by evictors (cleaner queue), never
+    by fillers — the decoupled write path (satellite task)."""
+    npages, ps, slots = 64, 4096, 8
+    store = _ThreadLoggingStore((np.arange(npages * ps) % 251).astype(np.uint8))
+    cfg = UMapConfig(page_size=ps, buffer_size=slots * ps, num_fillers=4,
+                     num_evictors=2, shards=4,
+                     evict_high_water=0.9, evict_low_water=0.7)
+    r = umap(store, config=cfg)
+    try:
+        # Dirty the whole buffer, then demand-fill past it: fillers need
+        # slots whose only victims are dirty => cleaner backpressure.
+        for pno in range(slots):
+            r.write(pno * ps, np.full(ps, 7, np.uint8))
+        for pno in range(slots, npages):
+            got = r.read(pno * ps, 64)
+            assert got[0] == (pno * ps) % 251
+        st = r.stats()
+        assert st["writebacks"] > 0, "no write-back happened at all"
+        bad = [t for t in store.write_threads if t.startswith("umap-filler")]
+        assert not bad, f"fillers performed write-back: {set(bad)}"
+    finally:
+        uunmap(r)
+        # flush path (main thread) + evictors are the only legal writers
+        legal = ("umap-evictor", "MainThread")
+        assert all(t.startswith(legal) for t in store.write_threads), \
+            set(store.write_threads)
+
+
+def test_fill_stall_counter_reports_backpressure():
+    npages, ps, slots = 32, 4096, 4
+    inner = HostArrayStore((np.arange(npages * ps) % 251).astype(np.uint8))
+    # Slow write-back: while the single evictor sleeps in write_from, a
+    # demand fill with every slot dirty has no clean victim and MUST stall
+    # on cleaner backpressure (instant write-back would let the eager
+    # dirty-top cleaning hide the stall).
+    store = RemoteStore(inner, latency_s=5e-3, bandwidth_Bps=1e9)
+    cfg = UMapConfig(page_size=ps, buffer_size=slots * ps, num_fillers=2,
+                     num_evictors=1, shards=1)
+    r = umap(store, config=cfg)
+    try:
+        for pno in range(slots):
+            r.write(pno * ps, np.full(ps, 9, np.uint8))
+        for pno in range(slots, npages):
+            got = r.read(pno * ps, 64)
+            assert got[0] == (pno * ps) % 251
+        st = r.stats()
+        assert st["fill_stalls"] >= 1
+        assert st["writebacks"] >= 1
+    finally:
+        uunmap(r)
+
+
+# ------------------------------------------- flush/unregister race regression
+
+
+def test_flush_evict_vs_concurrent_fills_leaves_no_ghost_pages():
+    """Regression (satellite task): fills posted just before close must not
+    re-install pages after the evicting flush — the seed leaked a ghost
+    entry (and later a KeyError in the evictor) through this window."""
+    npages, ps = 64, 4096
+    for _ in range(5):
+        inner = HostArrayStore((np.arange(npages * ps) % 251).astype(np.uint8))
+        store = RemoteStore(inner, latency_s=1e-3, bandwidth_Bps=1e9)
+        cfg = UMapConfig(page_size=ps, buffer_size=npages * ps, num_fillers=4,
+                         num_evictors=2, shards=8)
+        svc = PagingService(cfg)
+        r = umap(store, service=svc)
+        rid = r.region_id
+        r.write(0, np.full(64, 5, np.uint8))          # something dirty
+        svc.request_fills(r, list(range(npages)), demand=False)
+        r.close()                                      # unregister mid-flight
+        assert not svc.table.region_entries(rid), "ghost page survived close"
+        # service must remain fully functional for other regions
+        r2 = umap(HostArrayStore(np.full(8 * ps, 3, np.uint8)), service=svc)
+        assert (r2.read(0, 64) == 3).all()
+        r2.close()
+        svc.close()
+
+
+def test_acquire_during_close_raises_instead_of_reinstalling():
+    npages, ps = 16, 4096
+    store = HostArrayStore(np.zeros(npages * ps, np.uint8))
+    cfg = UMapConfig(page_size=ps, buffer_size=npages * ps, num_fillers=2,
+                     num_evictors=1)
+    r = umap(store, config=cfg)
+    r.read(0, 64)
+    r._closing = True            # what unregister sets before its flush
+    with pytest.raises(RuntimeError, match="closing"):
+        r.read(0, 64)
+    r._closing = False
+    uunmap(r)
+
+
+# ----------------------------------------------------------- stats aggregation
+
+
+def test_per_shard_counters_aggregate_in_snapshot():
+    npages, ps = 256, 4096
+    store = HostArrayStore((np.arange(npages * ps) % 251).astype(np.uint8))
+    # 2x slot headroom: slots are hash-striped across shards, so a 1:1
+    # slot:page ratio can overflow a hot stripe and evict (by design).
+    cfg = UMapConfig(page_size=ps, buffer_size=2 * npages * ps, num_fillers=4,
+                     num_evictors=1, shards=8)
+    r = umap(store, config=cfg)
+    try:
+        for pno in range(npages):
+            r.read(pno * ps, 64)
+        for pno in range(npages):
+            r.read(pno * ps, 64)               # second pass: page hits
+        st = r.stats()
+        assert st["shards"] == 8 and len(st["per_shard"]) == 8
+        for key in ("demand_faults", "page_hits"):
+            assert st[key] == sum(s[key] for s in st["per_shard"]), key
+        # faults spread across stripes, not funneled through one
+        assert sum(1 for s in st["per_shard"] if s["demand_faults"] > 0) >= 4
+        assert st["page_hits"] >= npages
+    finally:
+        uunmap(r)
