@@ -1,0 +1,151 @@
+"""Dirty-storm benchmark: per-page vs coalesced write-back (DESIGN.md §13).
+
+N writer threads dirty disjoint contiguous page ranges of a region backed
+by a latency-modeled store, with the watermarks set low enough that the
+cleaner pipeline runs *during* the storm (backpressure, not just the final
+flush).  The harness times how fast dirty pages drain to the store —
+*write-back throughput* — once with ``max_writeback_batch=1`` (the seed's
+one-write-per-page cleaner) and once with the coalescing pipeline, on the
+identical engine and workload.  The latency-modeled store is the point:
+every ``write_from`` pays a round-trip charge, so the ratio isolates the
+syscall/latency amortization the batched path buys (`store.num_writes`
+in the JSON shows the mechanism; DESIGN.md §11.2's shape-not-absolute
+rule applies to the absolute throughputs).
+
+Fill traffic (a write to an absent page still faults it in) is identical
+across both configurations — same ``max_batch_pages`` — so the pairing
+is apples-to-apples on the read side.
+
+Run standalone (``python -m benchmarks.bench_writeback [--smoke|--full]``)
+or via ``python -m benchmarks.run --only writeback``.  Rows land in
+``experiments/bench/writeback.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _storm_once(writeback_batch: int, threads: int, npages: int,
+                page_size: int, passes: int):
+    from repro.core import HostArrayStore, RemoteStore, UMapConfig, umap, uunmap
+
+    inner = HostArrayStore(np.zeros(npages * page_size, np.uint8))
+    store = RemoteStore(inner, latency_s=1e-3, bandwidth_Bps=2e9)
+    cfg = UMapConfig(page_size=page_size, buffer_size=npages * page_size,
+                     num_fillers=4, num_evictors=2, shards=8,
+                     max_writeback_batch=writeback_batch,
+                     evict_high_water=0.25, evict_low_water=0.1)
+    region = umap(store, config=cfg)
+    barrier = threading.Barrier(threads + 1)
+    quota = npages // threads
+
+    # Untimed warmup: make every page resident, so the timed section
+    # measures dirty-page *drain* (write-back) rather than fill reads —
+    # dirtying a resident page is a locked memcpy, near-free next to the
+    # store's write latency.
+    region.read(0, npages * page_size)
+
+    def writer(tid: int) -> None:
+        payload = np.full(page_size, 100 + tid, np.uint8)
+        barrier.wait()
+        # Repeated sequential whole-page dirtying over a private contiguous
+        # range: the dirty set the cleaners see is adjacent by construction,
+        # and the low watermarks keep them draining throughout the storm.
+        for _ in range(passes):
+            for p in range(tid * quota, (tid + 1) * quota):
+                region.write(p * page_size, payload)
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(threads)]
+    [t.start() for t in ts]
+    barrier.wait()
+    t0 = time.perf_counter()
+    [t.join() for t in ts]
+    region.flush()                      # drain every remaining dirty page
+    dt = time.perf_counter() - t0
+    st = region.stats()
+    drained = st["writebacks"]
+    stats = {
+        "writebacks": drained,
+        "coalesced_writebacks": st["coalesced_writebacks"],
+        "writeback_pages": st["writeback_pages"],
+        "store_writes": store.num_writes,
+        "fill_stalls": st["fill_stalls"],
+        "watermark_flushes": st["watermark_flushes"],
+    }
+    uunmap(region)
+    return dt, drained, stats
+
+
+def run(quick: bool = True) -> List:
+    from .common import Row
+
+    threads = 4
+    if quick:
+        npages, passes, reps = 512, 3, 5
+    else:
+        npages, passes, reps = 1024, 4, 5
+    page_size = 4096
+    configs = (("per-page", 1), ("batched", 16))
+
+    # Interleaved, paired reps (same discipline as bench_fault_storm):
+    # configs run back-to-back within each rep so machine drift cancels in
+    # the per-rep ratios; the median rep is reported.
+    runs: Dict[str, list] = {label: [] for label, _ in configs}
+    for _ in range(reps):
+        for label, batch in configs:
+            runs[label].append(
+                _storm_once(writeback_batch=batch, threads=threads,
+                            npages=npages, page_size=page_size,
+                            passes=passes))
+
+    def med(lst, key):
+        s = sorted(lst, key=key)
+        return s[len(s) // 2]
+
+    rows: List[Row] = []
+    for label, batch in configs:
+        dt, drained, stats = med(runs[label], key=lambda r: r[1] / r[0])
+        rows.append(Row("writeback", label, page_size, dt, {
+            "threads": threads,
+            "max_writeback_batch": batch,
+            "passes": passes,
+            "drain_pages_per_s": round(drained / dt, 1) if dt else float("nan"),
+            **stats,
+        }))
+    per_rep = [
+        (runs["batched"][i][1] / runs["batched"][i][0])
+        / (runs["per-page"][i][1] / runs["per-page"][i][0])
+        for i in range(reps)
+    ]
+    rows.append(Row("writeback", "summary", page_size, 0.0, {
+        "threads": threads,
+        "speedup_batched_vs_per_page": round(sorted(per_rep)[reps // 2], 2),
+    }))
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import print_rows, save_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger dirty set")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick storm, JSON artifact")
+    args = ap.parse_args(argv)
+    rows = run(quick=not args.full)
+    path = save_rows("writeback", rows)
+    print_rows(rows)
+    print(f"# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

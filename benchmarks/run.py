@@ -9,6 +9,8 @@
               weight-pager readahead
   fault_storm §3.3    multi-threaded fault storm: shard-count scaling,
               steal/contention counters (DESIGN.md §12)
+  writeback   §3.5    dirty storm: per-page vs coalesced write-back
+              (DESIGN.md §13)
   fault_overhead  µs/fault microbenchmark feeding the PageSizeAdvisor
 
 Prints ``name,us_per_call,derived`` CSV and writes JSON rows under
@@ -75,6 +77,7 @@ SUITES = {
     "nstore": ("bench_nstore", "Fig 7/8"),
     "paged_kv": ("bench_paged_kv", "TPU transplant"),
     "fault_storm": ("bench_fault_storm", "§3.3 scaling"),
+    "writeback": ("bench_writeback", "§3.5 write-back"),
 }
 
 
@@ -116,6 +119,12 @@ def main(argv=None) -> int:
                     print(f"# {name} ({fig}): fill-throughput speedup vs "
                           f"shards=1 = {summary.extra['best_speedup']:.2f}x",
                           flush=True)
+            elif name == "writeback":            # batched vs per-page drain
+                summary = next((r for r in rows if r.config == "summary"), None)
+                if summary:
+                    ratio = summary.extra["speedup_batched_vs_per_page"]
+                    print(f"# {name} ({fig}): drain-throughput speedup "
+                          f"batched vs per-page = {ratio:.2f}x", flush=True)
         except Exception as e:  # noqa: BLE001
             all_ok = False
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)

@@ -41,6 +41,42 @@ def _leaf_paths(tree: PyTree):
     return leaves, treedef
 
 
+def save_tree_to_store(store, tree: PyTree, offset: int = 0) -> dict:
+    """Persist all leaves into a ``BackingStore`` with ONE batched write.
+
+    Leaves are laid out back-to-back from ``offset`` and shipped through
+    ``BackingStore.write_from_batch`` — one ``pwritev`` / extent walk /
+    latency charge for the whole tree instead of one write per leaf
+    (the coalesced write-back pipeline, DESIGN.md §13).  Returns the
+    manifest needed by :func:`restore_tree_from_store`.
+    """
+    leaves, treedef = _leaf_paths(tree)
+    bufs, metas = [], []
+    pos = offset
+    for leaf in leaves:
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        flat = arr.view(np.uint8).reshape(-1)
+        metas.append({"shape": list(arr.shape), "dtype": str(arr.dtype),
+                      "nbytes": int(flat.nbytes)})
+        bufs.append(flat)
+        pos += flat.nbytes
+    store.write_from_batch(offset, bufs)
+    store.flush()
+    return {"treedef": str(treedef), "offset": offset,
+            "nbytes": pos - offset, "leaves": metas}
+
+
+def restore_tree_from_store(store, manifest: dict, like: PyTree) -> PyTree:
+    """Restore a :func:`save_tree_to_store` image (ONE batched read)."""
+    leaves, treedef = _leaf_paths(like)
+    assert len(manifest["leaves"]) == len(leaves), "checkpoint/tree mismatch"
+    bufs = [np.empty(m["nbytes"], np.uint8) for m in manifest["leaves"]]
+    store.read_into_batch(manifest["offset"], bufs)
+    out = [b.view(np.dtype(m["dtype"])).reshape(m["shape"])
+           for b, m in zip(bufs, manifest["leaves"])]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def save(ckpt_dir: str | Path, step: int, tree: PyTree) -> Path:
     """Synchronous atomic checkpoint save."""
     ckpt_dir = Path(ckpt_dir)
@@ -117,14 +153,32 @@ class AsyncCheckpointer:
     If more than ``high_water`` saves are pending, the caller blocks until
     the writer drains to ``low_water`` — bounding dirty (unflushed) steps,
     exactly the UMap evictor-watermark contract.
+
+    With ``store=`` set, writers persist each step into that
+    ``BackingStore`` via :func:`save_tree_to_store` — the whole tree as ONE
+    batched write (DESIGN.md §13) — instead of one ``.npy`` file per leaf.
+    Store saves are double-buffered (alternating halves of the store;
+    ``save_async`` rejects trees larger than half the store) and
+    serialized across writer threads, and ``store_manifest`` is published
+    only after the slot is fully written+flushed — the store-mode
+    analogue of the file path's tmp-dir + rename atomic publish: a crash
+    mid-save leaves the previously published image intact.  Note the
+    two-slot history window: a restore that overlaps TWO subsequent
+    completed saves has its slot rewritten mid-read, so pause saves (or
+    ``flush`` first) around restores taken from a live checkpointer.
     """
 
     def __init__(self, ckpt_dir: str | Path, writers: int = 1,
-                 high_water: int = 2, low_water: int = 1, keep: int = 3):
+                 high_water: int = 2, low_water: int = 1, keep: int = 3,
+                 store=None):
         self.ckpt_dir = Path(ckpt_dir)
         self.high_water = high_water
         self.low_water = low_water
         self.keep = keep
+        self.store = store
+        self.store_manifest: Optional[dict] = None
+        self._store_lock = threading.Lock()    # serialize store-mode saves
+        self._store_slot = 0                   # double-buffer slot toggle
         self._q: "queue.Queue" = queue.Queue()
         self._pending = 0
         self._lock = threading.Lock()
@@ -141,6 +195,17 @@ class AsyncCheckpointer:
 
     def save_async(self, step: int, tree: PyTree) -> None:
         host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+        if self.store is not None:
+            # Fail fast on the caller: an image larger than one slot would
+            # overwrite the other slot's published bytes (or be silently
+            # truncated by clamping stores).
+            nbytes = sum(a.nbytes for a in
+                         jax.tree_util.tree_leaves(host_tree))
+            if nbytes > self.store.size // 2:
+                raise ValueError(
+                    f"checkpoint image of {nbytes} bytes exceeds the "
+                    f"double-buffer slot ({self.store.size // 2} bytes); "
+                    f"use a larger store")
         with self._lock:
             if self._pending >= self.high_water:
                 self.stats["blocked_on_watermark"] += 1
@@ -155,8 +220,21 @@ class AsyncCheckpointer:
             if item is self._stop:
                 return
             step, tree = item
-            save(self.ckpt_dir, step, tree)
-            gc_old(self.ckpt_dir, self.keep)
+            if self.store is not None:
+                with self._store_lock:
+                    # Write into the half NOT referenced by the published
+                    # manifest, then publish — the previous image stays
+                    # intact until the new one is durable.
+                    offset = self._store_slot * (self.store.size // 2)
+                    self._store_slot ^= 1
+                    manifest = save_tree_to_store(self.store, tree,
+                                                  offset=offset)
+                    manifest["step"] = step
+                    with self._lock:
+                        self.store_manifest = manifest
+            else:
+                save(self.ckpt_dir, step, tree)
+                gc_old(self.ckpt_dir, self.keep)
             with self._lock:
                 self._pending -= 1
                 self.stats["saves"] += 1

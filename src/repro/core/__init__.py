@@ -30,6 +30,7 @@ from .hints import (  # noqa: F401
     phase_for_advice,
     plan_prefetch,
 )
+from .lease import LeaseRun, PageLease  # noqa: F401
 from .pagetable import (  # noqa: F401
     PageEntry,
     PageState,

@@ -17,6 +17,9 @@ Extensions beyond the paper's list (this repo's adaptive engine, DESIGN.md ยง8โ
   UMAP_ADAPTIVE                       enable the online access-pattern classifier (default off)
   UMAP_MAX_BATCH_PAGES                max adjacent pages per coalesced fill (default 16; 1 disables)
   UMAP_SHARDS                         page-metadata shard count (default 0 = min(16, 2*fillers))
+  UMAP_MAX_WRITEBACK_BATCH            max adjacent dirty pages per coalesced write-back (default 16; 1 disables)
+  UMAP_ZERO_COPY_LEASES               zero-copy lease views into the page buffer (default on)
+  UMAP_MAX_LEASE_RUN                  max pages a single lease_run may pin (default 64)
 
 Programmatic control mirrors the paper's ``umapcfg_set_xx`` interfaces:
 construct :class:`UMapConfig` directly or call :func:`from_env`.
@@ -119,6 +122,27 @@ class UMapConfig:
     # effective batch is min(max_batch_pages, store.batch_read_hint).
     max_batch_pages: int = 16                # UMAP_MAX_BATCH_PAGES
 
+    # --- write-back coalescing + zero-copy leases (DESIGN.md ยง13) -----------
+    # Evictors opportunistically drain the cleaner queue and group adjacent
+    # dirty pages of one region into a single BackingStore.write_from_batch
+    # call.  1 restores one-write-per-page; the effective batch is
+    # min(max_writeback_batch, store.batch_write_hint).
+    max_writeback_batch: int = 16            # UMAP_MAX_WRITEBACK_BATCH
+    # When True, region.lease()/lease_run() return pinned views directly
+    # into the page buffer (no memcpy).  When False, leases are copy-backed
+    # (private snapshot, write-leases write back through region.write on
+    # release) โ a debugging mode that keeps the lease API while removing
+    # all aliasing between application views and the buffer.
+    zero_copy_leases: bool = True            # UMAP_ZERO_COPY_LEASES
+    # Ceiling on pages one lease_run may pin at once.  Runs hold multiple
+    # pins per thread, trading away the pager's one-pin-per-thread
+    # deadlock-freedom argument; the cap (further clamped to half the
+    # buffer by the service) bounds how much of the buffer one run can
+    # hold, and lease_run's abort-and-retry protocol releases an
+    # incomplete run's pins rather than deadlocking when several runs
+    # contend for the same slots.
+    max_lease_run: int = 64                  # UMAP_MAX_LEASE_RUN
+
     # --- sharded concurrency (DESIGN.md ยง12) --------------------------------
     # Page metadata (table + slot free lists + eviction state) is striped
     # into `shards` independent lock domains keyed by hash(PageKey), so
@@ -150,6 +174,11 @@ class UMapConfig:
             raise ValueError("need at least one filler and one evictor")
         if self.max_batch_pages < 1:
             raise ValueError(f"max_batch_pages must be >= 1, got {self.max_batch_pages}")
+        if self.max_writeback_batch < 1:
+            raise ValueError(
+                f"max_writeback_batch must be >= 1, got {self.max_writeback_batch}")
+        if self.max_lease_run < 1:
+            raise ValueError(f"max_lease_run must be >= 1, got {self.max_lease_run}")
         if self.pattern_window < 4:
             raise ValueError(f"pattern_window must be >= 4, got {self.pattern_window}")
         if self.shards < 0:
@@ -216,6 +245,13 @@ class UMapConfig:
             kw["max_batch_pages"] = int(env["UMAP_MAX_BATCH_PAGES"])
         if "UMAP_SHARDS" in env:
             kw["shards"] = int(env["UMAP_SHARDS"])
+        if "UMAP_MAX_WRITEBACK_BATCH" in env:
+            kw["max_writeback_batch"] = int(env["UMAP_MAX_WRITEBACK_BATCH"])
+        if "UMAP_ZERO_COPY_LEASES" in env:
+            kw["zero_copy_leases"] = (env["UMAP_ZERO_COPY_LEASES"].strip().lower()
+                                      in ("1", "true", "yes", "on"))
+        if "UMAP_MAX_LEASE_RUN" in env:
+            kw["max_lease_run"] = int(env["UMAP_MAX_LEASE_RUN"])
         kw.update(overrides)
         return cls(**kw)
 
@@ -239,6 +275,7 @@ class UMapConfig:
             mmap_compat=True,
             adaptive=False,        # the kernel has no app-pattern engine
             max_batch_pages=1,     # kernel faults resolve one page at a time
+            max_writeback_batch=1,  # and writes back one page at a time
             shards=1,              # one mmap_sem domain per address space
         )
         kw.update(overrides)

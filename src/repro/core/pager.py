@@ -38,7 +38,7 @@ Lock ordering (DESIGN.md §12 — violating this is a deadlock):
   2. one shard lock at a time (never two shards simultaneously)
   3. one fill-deque condition at a time (never two nested)
 
-Two engine extensions beyond the paper's static design (DESIGN.md §8–9):
+Engine extensions beyond the paper's static design (DESIGN.md §8–9, §13):
 
   * **Adaptive retuning** — with ``config.adaptive``, every non-hint-pinned
     region gets an online access-pattern classifier (pattern.py) fed by the
@@ -51,6 +51,15 @@ Two engine extensions beyond the paper's static design (DESIGN.md §8–9):
     (``BackingStore.read_into_batch``): one latency charge / syscall per
     run, pages installed under per-shard lock acquisitions, every blocked
     faulting thread woken.  ``config.max_batch_pages=1`` disables it.
+  * **Zero-copy leases** — ``lease_page``/``lease_run`` hand the
+    application pinned views directly into the page buffer (no memcpy);
+    the pin makes the page ineligible for eviction/write-back, and the
+    cleaner re-checks pins at dequeue time (core/lease.py, DESIGN.md §13).
+  * **Coalesced write-back** — evictors drain the cleaner queue in
+    batches, regroup adjacent dirty pages per region, and write each run
+    with ONE ``BackingStore.write_from_batch`` call; ``flush_region``
+    shares the same pipeline.  ``config.max_writeback_batch=1`` restores
+    one-write-per-page.
 
 The ``mmap_compat`` configuration freezes this machinery to kernel-mmap
 semantics (synchronous resolution on the faulting thread serialized on an
@@ -70,6 +79,7 @@ from typing import Dict, List, Optional, TYPE_CHECKING
 
 from .buffer import EvictionPolicy, PageBuffer, make_policy
 from .config import UMapConfig
+from .lease import LeaseRun, PageLease
 from .pagetable import (
     PageEntry,
     PageKey,
@@ -92,6 +102,8 @@ _SHARD_COUNTERS = (
     "demand_faults", "page_hits", "wait_hits", "prefetch_fills",
     "prefetch_hits", "evictions", "writebacks", "coalesced_fills",
     "coalesced_pages", "lock_contended", "fill_stalls",
+    "coalesced_writebacks", "writeback_pages", "leases",
+    "lease_blocked_evictions",
 )
 
 # Service-level counters: each has a single writer thread (watermark
@@ -122,6 +134,10 @@ class ServiceStats:
     fill_queue_peak: int = 0
     coalesced_fills: int = 0        # batched fill operations (>= 2 pages each)
     coalesced_pages: int = 0        # pages installed via batched fills
+    coalesced_writebacks: int = 0   # batched write-back ops (>= 2 pages each)
+    writeback_pages: int = 0        # pages written via batched write-backs
+    leases: int = 0                 # zero-copy leases granted (DESIGN.md §13)
+    lease_blocked_evictions: int = 0  # victim/clean skips due to live leases
     pattern_transitions: int = 0    # classifier-driven retunes applied
     shards: int = 1                 # metadata stripe count
     steals: int = 0                 # work-stealing events (idle filler stole)
@@ -394,12 +410,19 @@ class PagingService:
         else:
             self._submit_fill_many(region, entries)
 
-    def acquire_one(self, region: "UMapRegion", page_no: int) -> PageEntry:
+    def acquire_one(self, region: "UMapRegion", page_no: int,
+                    lease: bool = False,
+                    deadline: Optional[float] = None) -> Optional[PageEntry]:
         """Pin one page, faulting it in if needed (userfaultfd-style block).
 
-        The caller must not hold any other pins (deadlock-freedom invariant).
-        Raises ``RuntimeError`` once the region has started closing — the
-        guard that closes the flush/unregister re-install race.
+        The caller must not hold any other pins (deadlock-freedom invariant;
+        ``lease_run`` is the documented exception — it passes ``deadline``,
+        a ``time.monotonic()`` bound past which this returns ``None`` so
+        the run can abort-and-retry instead of deadlocking).  With
+        ``lease=True`` the pin is accounted as a zero-copy lease
+        (``entry.leases`` + the ``leases`` counter, DESIGN.md §13).  Raises
+        ``RuntimeError`` once the region has started closing — the guard
+        that closes the flush/unregister re-install race.
         """
         key = (region.region_id, page_no)
         shard = self._shard_of(key)
@@ -419,6 +442,9 @@ class PagingService:
                     waitee = e
                 elif e.state is PageState.PRESENT:
                     e.pins += 1
+                    if lease:
+                        e.leases += 1
+                        shard.counters["leases"] += 1
                     shard.policy.on_touch(key)
                     if first_attempt:
                         shard.counters["page_hits"] += 1
@@ -433,6 +459,8 @@ class PagingService:
             if dispatch is not None:
                 self._dispatch_fill(region, dispatch)
                 self._observe_faults(region, [page_no])
+            if deadline is not None and time.monotonic() >= deadline:
+                return None        # dispatched fill proceeds; wait abandoned
             waitee.event.wait(timeout=0.05)
             first_attempt = False
 
@@ -518,6 +546,109 @@ class PagingService:
         with self._locked(shard):
             shard.table.mark_dirty(entry)
         self.watermark.poke()
+
+    # ------------------------------------------- zero-copy leases (DESIGN.md §13)
+
+    def lease_page(self, region: "UMapRegion", page_no: int,
+                   write: bool = False,
+                   _deadline: Optional[float] = None) -> Optional[PageLease]:
+        """Lease one page: a pinned view directly into the page buffer.
+
+        The pin rides ``entry.pins`` (plus the ``entry.leases`` lease count),
+        so the page cannot be evicted or written back while the view is
+        live; a write-lease marks the page dirty exactly once, on release.
+        With ``config.zero_copy_leases=False`` the lease is copy-backed
+        (private snapshot; see core/lease.py).  ``_deadline`` is
+        ``lease_run``'s abort bound — past it the grant returns ``None``.
+        """
+        nbytes = region.page_nbytes(page_no)
+        if not self.config.zero_copy_leases:
+            data = region.read(page_no * region.page_size, nbytes)
+            shard = self._shard_of((region.region_id, page_no))
+            with self._locked(shard):
+                shard.counters["leases"] += 1
+            if not write:
+                data.flags.writeable = False
+            return PageLease(region, page_no, write, data, entry=None)
+        entry = self.acquire_one(region, page_no, lease=True,
+                                 deadline=_deadline)
+        if entry is None:
+            return None
+        view = self.buffer.slot_view(entry.slot, nbytes)
+        if not write:
+            view = view[:]                   # fresh view object, shared memory
+            view.flags.writeable = False
+        return PageLease(region, page_no, write, view, entry)
+
+    # Per-attempt grant bound for lease_run: long enough that any live
+    # fill completes, short enough that an aborted attempt retries fast.
+    _LEASE_RUN_ATTEMPT_S = 0.25
+
+    def lease_run(self, region: "UMapRegion", first_page: int, npages: int,
+                  write: bool = False) -> LeaseRun:
+        """Lease ``npages`` adjacent pages, posting all fills up front.
+
+        Holds ``npages`` pins on the calling thread — the documented
+        exception to the one-pin-per-thread invariant.  Two guards make
+        that safe under ANY number of concurrent runs: the length cap
+        ``min(config.max_lease_run, num_slots // 2)`` (longer requests
+        raise ``ValueError``), and abort-and-retry — a grant that cannot
+        complete within the attempt bound releases every pin the run
+        holds and retries with jittered backoff, so incomplete runs never
+        hold the slots other runs are waiting on (two-phase locking with
+        abort, in place of a deadlock).
+        """
+        cap = max(1, min(self.config.max_lease_run,
+                         self.buffer.num_slots // 2))
+        if npages < 1 or npages > cap:
+            raise ValueError(
+                f"lease_run of {npages} pages outside [1, {cap}] "
+                f"(max_lease_run={self.config.max_lease_run}, "
+                f"{self.buffer.num_slots} slots)")
+        pages = list(range(first_page, first_page + npages))
+        attempt = 0
+        while True:
+            if self.config.zero_copy_leases:
+                self.request_fills(region, pages)  # I/O overlap across the run
+            deadline = time.monotonic() + self._LEASE_RUN_ATTEMPT_S
+            leases: List[PageLease] = []
+            try:
+                for pno in pages:
+                    ls = self.lease_page(region, pno, write=write,
+                                         _deadline=deadline)
+                    if ls is None:
+                        break
+                    leases.append(ls)
+            except BaseException:
+                for ls in leases:
+                    ls.abandon()               # never handed out: no dirty mark
+                raise
+            if len(leases) == len(pages):
+                return LeaseRun(leases)
+            # Abort: free the slots peers are waiting on.  abandon(), not
+            # release() — the views were never handed to the application,
+            # so a write-mode abort must not mark untouched pages dirty.
+            for ls in leases:
+                ls.abandon()
+            attempt += 1
+            # Thread-dependent jitter breaks symmetric retry collisions.
+            time.sleep(0.001 * (1 + (threading.get_ident() >> 4) % 7)
+                       * min(attempt, 8))
+
+    def release_lease(self, entry: PageEntry, write: bool) -> None:
+        """Drop a lease pin; a write-lease marks the page dirty here —
+        exactly once, because PageLease.release is idempotent."""
+        shard = self._shard_of(entry.key)
+        with self._locked(shard):
+            entry.leases -= 1
+            entry.pins -= 1
+            assert entry.pins >= 0 and entry.leases >= 0, \
+                f"lease underflow on {entry.key}"
+            if write:
+                shard.table.mark_dirty(entry)
+            shard.cond.notify_all()
+        if write:
+            self.watermark.poke()
 
     # ------------------------------------------- adaptive engine (DESIGN.md §8)
 
@@ -892,12 +1023,23 @@ class PagingService:
 
     def _clean_victim_ok(self, shard: _Shard, key: PageKey) -> bool:
         e = shard.table.get(key)
-        return (e is not None and e.state is PageState.PRESENT
-                and e.pins == 0 and not e.dirty)
+        if e is None or e.state is not PageState.PRESENT:
+            return False
+        if e.pins > 0:
+            if e.leases > 0:      # capacity pressure blocked by a live lease
+                shard.counters["lease_blocked_evictions"] += 1
+            return False
+        return not e.dirty
 
     def _any_victim_ok(self, shard: _Shard, key: PageKey) -> bool:
         e = shard.table.get(key)
-        return e is not None and e.state is PageState.PRESENT and e.pins == 0
+        if e is None or e.state is not PageState.PRESENT:
+            return False
+        if e.pins > 0:
+            if e.leases > 0:
+                shard.counters["lease_blocked_evictions"] += 1
+            return False
+        return True
 
     def _drop_clean(self, shard: _Shard, entry: PageEntry) -> None:
         """Evict a clean victim — pure metadata, no I/O (shard lock held)."""
@@ -913,14 +1055,18 @@ class PagingService:
         posted = 0
         for key in shard.table.resident_keys():
             e = shard.table.get(key)
-            if (e is not None and e.dirty and e.state is PageState.PRESENT
-                    and e.pins == 0):
-                e.state = PageState.CLEANING
-                e.event.clear()
-                self._clean_q.put(("clean", e))
-                posted += 1
-                if posted >= max_pages:
-                    break
+            if e is None or not e.dirty or e.state is not PageState.PRESENT:
+                continue
+            if e.pins > 0:
+                if e.leases > 0:      # dirty but lease-pinned: repost later
+                    shard.counters["lease_blocked_evictions"] += 1
+                continue
+            e.state = PageState.CLEANING
+            e.event.clear()
+            self._clean_q.put(("clean", e))
+            posted += 1
+            if posted >= max_pages:
+                break
         return posted
 
     def _alloc_slot_blocking(self, key: PageKey) -> int:
@@ -1016,61 +1162,166 @@ class PagingService:
         Runs on evictor threads, the flush path, or the mmap baseline's
         faulting thread — never on a UMap filler (read/write decoupling).
         """
-        region = self._regions.get(victim.key[0])
-        shard = self._shard_of(victim.key)
-        wrote = False
-        if victim.dirty and region is not None:
-            nbytes = region.page_nbytes(victim.key[1])
-            buf = self.buffer.slot_view(victim.slot, nbytes)
-            region.store.write_from(victim.key[1] * region.page_size, buf)
-            wrote = True
-        with self._locked(shard):
-            if wrote:
-                shard.counters["writebacks"] += 1
-            self.buffer.release(victim.slot)
-            shard.free.append(victim.slot)
-            shard.table.remove(victim)
-            shard.counters["evictions"] += 1
-            shard.cond.notify_all()
+        self._evict_now_batch([victim])
+
+    def _writeback_runs(self, pairs):
+        """Group (region, entry) pairs into adjacent same-region runs.
+
+        Each yielded run is written with ONE ``write_from_batch`` call;
+        run length is capped at ``min(max_writeback_batch,
+        store.batch_write_hint)``.  Sorting by (region, page) here is what
+        turns an arbitrary cleaner-queue drain into sequential store writes.
+        """
+        pairs = sorted(pairs, key=lambda p: (p[1].key[0], p[1].key[1]))
+        run: List[PageEntry] = []
+        run_region = None
+        for region, e in pairs:
+            limit = max(1, min(self.config.max_writeback_batch,
+                               getattr(region.store, "batch_write_hint", 1)))
+            if (run and (region is not run_region
+                         or e.key[1] != run[-1].key[1] + 1
+                         or len(run) >= limit)):
+                yield run_region, run
+                run = []
+            run_region = region
+            run.append(e)
+        if run:
+            yield run_region, run
+
+    def _write_run(self, region: "UMapRegion", run: List[PageEntry]) -> None:
+        """ONE store write for an adjacent run — I/O outside all locks —
+        then per-shard atomic clean-bit clearing + waiter wakeup."""
+        bufs = [self.buffer.slot_view(e.slot, region.page_nbytes(e.key[1]))
+                for e in run]
+        if len(run) == 1:
+            region.store.write_from(run[0].key[1] * region.page_size, bufs[0])
+        else:
+            region.store.write_from_batch(
+                run[0].key[1] * region.page_size, bufs)
 
     def _evictor_loop(self, worker_id: int) -> None:
+        # Opportunistic batch drain: after blocking on the first item, pull
+        # whatever else is already queued (bounded) so adjacent dirty pages
+        # posted by the watermark/backpressure paths coalesce into batched
+        # store writes instead of one syscall-equivalent per page.
+        drain = 4 * max(1, self.config.max_writeback_batch)
         while True:
             work = self._clean_q.get()
             if work is _SHUTDOWN:
                 return
-            kind, payload = work
+            items = [work]
+            swallowed_shutdown = False
+            while len(items) < drain:
+                try:
+                    nxt = self._clean_q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _SHUTDOWN:
+                    swallowed_shutdown = True    # re-posted below
+                    break
+                items.append(nxt)
             try:
-                if kind == "clean":
-                    self._do_clean(payload)
-                elif kind == "evict":
-                    self._evict_now(payload)
+                # Every queued payload is ("clean", entry) — eviction goes
+                # through _evict_now_batch directly, never this queue.
+                self._do_clean_batch([e for _, e in items])
             except Exception:  # pragma: no cover
                 import traceback
                 traceback.print_exc()
+            if swallowed_shutdown:
+                self._clean_q.put(_SHUTDOWN)
 
     def _do_clean(self, entry: PageEntry) -> None:
         """Write a dirty page back to its store; page stays resident."""
-        region = self._regions.get(entry.key[0])
-        shard = self._shard_of(entry.key)
-        if region is None:                        # unregistered mid-flight
+        self._do_clean_batch([entry])
+
+    def _do_clean_batch(self, entries: List[PageEntry]) -> None:
+        """Write dirty pages back, coalescing adjacent pages per region.
+
+        Dequeue-time re-validation (under each page's stripe lock) is the
+        pinned-write-back fix: a page that picked up a pin — e.g. a
+        zero-copy lease — after it was posted to the cleaner queue must NOT
+        be written back mid-mutation.  Such pages revert to PRESENT (still
+        dirty); the watermark reposts them once the pin drops.  Validated
+        pages stay CLEANING, which no path can pin, so their bytes are
+        stable for the batched write below.
+        """
+        valid: List = []
+        for e in entries:
+            region = self._regions.get(e.key[0])
+            shard = self._shard_of(e.key)
             with self._locked(shard):
-                if shard.table.get(entry.key) is entry:
-                    self.buffer.release(entry.slot)
-                    shard.free.append(entry.slot)
-                    shard.table.remove(entry)
-                entry.event.set()
+                if shard.table.get(e.key) is not e:
+                    e.event.set()                 # removed mid-flight
+                    shard.cond.notify_all()
+                    continue
+                if region is None:                # unregistered mid-flight
+                    self.buffer.release(e.slot)
+                    shard.free.append(e.slot)
+                    shard.table.remove(e)
+                    shard.cond.notify_all()
+                    continue
+                if e.state is not PageState.CLEANING:
+                    e.event.set()                 # handled elsewhere (flush)
+                    shard.cond.notify_all()
+                    continue
+                if e.pins > 0:
+                    # The satellite fix: posted clean, pinned since.
+                    e.state = PageState.PRESENT
+                    e.event.set()
+                    if e.leases > 0:
+                        shard.counters["lease_blocked_evictions"] += 1
+                    shard.cond.notify_all()
+                    continue
+                valid.append((region, e))
+        for region, run in self._writeback_runs(valid):
+            self._write_run(region, run)          # I/O outside all locks
+            groups: Dict[int, List[PageEntry]] = {}
+            for e in run:
+                groups.setdefault(self._shard_index(e.key), []).append(e)
+            seed_si = self._shard_index(run[0].key)
+            for si, es in groups.items():
+                shard = self.shards[si]
+                with self._locked(shard):
+                    for e in es:
+                        if e.state is PageState.CLEANING:
+                            e.state = PageState.PRESENT
+                        shard.table.mark_clean(e)
+                        shard.counters["writebacks"] += 1
+                        e.event.set()
+                    if si == seed_si and len(run) > 1:
+                        shard.counters["coalesced_writebacks"] += 1
+                        shard.counters["writeback_pages"] += len(run)
+                    shard.cond.notify_all()
+
+    def _evict_now_batch(self, victims: List[PageEntry]) -> None:
+        """Write back dirty victims (batched per adjacent run) and free all
+        their slots.  No locks held on entry; victims are EVICTING, which no
+        path can pin or re-dirty, so bytes are stable across the write."""
+        writable = []
+        for v in victims:
+            region = self._regions.get(v.key[0])
+            if v.dirty and region is not None:
+                writable.append((region, v))
+        wrote = set()
+        for region, run in self._writeback_runs(writable):
+            self._write_run(region, run)
+            seed_si = self._shard_index(run[0].key)
+            if len(run) > 1:
+                shard = self.shards[seed_si]
+                with self._locked(shard):
+                    shard.counters["coalesced_writebacks"] += 1
+                    shard.counters["writeback_pages"] += len(run)
+            wrote.update(e.key for e in run)
+        for v in victims:
+            shard = self._shard_of(v.key)
+            with self._locked(shard):
+                if v.key in wrote:
+                    shard.counters["writebacks"] += 1
+                self.buffer.release(v.slot)
+                shard.free.append(v.slot)
+                shard.table.remove(v)
+                shard.counters["evictions"] += 1
                 shard.cond.notify_all()
-            return
-        nbytes = region.page_nbytes(entry.key[1])
-        buf = self.buffer.slot_view(entry.slot, nbytes)
-        region.store.write_from(entry.key[1] * region.page_size, buf)
-        with self._locked(shard):
-            if entry.state is PageState.CLEANING:
-                entry.state = PageState.PRESENT
-            shard.table.mark_clean(entry)
-            shard.counters["writebacks"] += 1
-            entry.event.set()
-            shard.cond.notify_all()
 
     def submit_clean_batch(self, max_pages: int) -> int:
         """Queue up to ``max_pages`` dirty pages for write-back (watermarks)."""
@@ -1117,11 +1368,12 @@ class PagingService:
                     break
                 time.sleep(0.001)
                 continue
-            for e in batch:
-                if evict:
-                    self._evict_now(e)
-                else:
-                    self._do_clean(e)
+            # Adjacent dirty pages drain as single write_from_batch calls —
+            # the flush path shares the cleaner pipeline's coalescing.
+            if evict:
+                self._evict_now_batch(batch)
+            else:
+                self._do_clean_batch(batch)
         region.store.flush()
 
     # ------------------------------------------------------------- queries

@@ -35,7 +35,7 @@ class PageState(enum.Enum):
 
 class PageEntry:
     __slots__ = (
-        "key", "state", "slot", "dirty", "pins", "event",
+        "key", "state", "slot", "dirty", "pins", "leases", "event",
         "prefetched", "touched_after_prefetch",
     )
 
@@ -45,6 +45,11 @@ class PageEntry:
         self.slot = slot
         self.dirty = False
         self.pins = 0
+        # How many of `pins` are zero-copy leases (core/lease.py).  A leased
+        # page is pinned like any other, but the distinction feeds the
+        # `lease_blocked_evictions` telemetry: capacity/clean pressure that
+        # cannot make progress because the application holds views.
+        self.leases = 0
         # Signaled when the page becomes PRESENT (UFFDIO_COPY semantics: wake
         # waiters only after the full page is installed) or when CLEANING /
         # EVICTING completes.

@@ -20,6 +20,7 @@ from typing import Callable, List, Optional, Sequence, TYPE_CHECKING
 import numpy as np
 
 from .config import UMapConfig
+from .lease import LeaseRun, PageLease
 from .pager import PagingService
 from .store import BackingStore
 
@@ -145,6 +146,37 @@ class UMapRegion:
                 finally:
                     self.service.release_one(e)
             pos += hi - lo
+
+    # ------------------------------------------------- zero-copy leases (§13)
+
+    def lease(self, page_no: int, write: bool = False) -> PageLease:
+        """Lease page ``page_no``: a pinned view straight into the page
+        buffer — no memcpy (DESIGN.md §13).
+
+            with region.lease(7, write=True) as ls:
+                ls.view[:8] = payload          # in-place mutation
+
+        The page is ineligible for eviction/write-back while the lease is
+        live; a write-lease marks it dirty exactly once, on release.  For
+        small sub-page transfers ``read``/``write`` (the locked-copy fast
+        path) remain cheaper than lease bookkeeping — leases pay off for
+        whole-page and multi-page access.
+        """
+        if not 0 <= page_no < self.num_pages:
+            raise IndexError(
+                f"page {page_no} outside region of {self.num_pages} pages")
+        return self.service.lease_page(self, page_no, write=write)
+
+    def lease_run(self, first_page: int, npages: int,
+                  write: bool = False) -> LeaseRun:
+        """Lease ``npages`` adjacent pages as one unit (fills posted up
+        front for I/O overlap).  Length-capped — see
+        :meth:`PagingService.lease_run`."""
+        if not (0 <= first_page and first_page + npages <= self.num_pages):
+            raise IndexError(
+                f"run [{first_page}, {first_page + npages}) outside region "
+                f"of {self.num_pages} pages")
+        return self.service.lease_run(self, first_page, npages, write=write)
 
     # ------------------------------------------------------------- hints
 

@@ -63,6 +63,10 @@ class BackingStore(abc.ABC):
     #: in-memory stores gain little beyond queue/wakeup amortization.
     batch_read_hint: int = 8
 
+    #: Same bound for the write side: the cleaner pipeline caps write-back
+    #: runs at ``min(config.max_writeback_batch, store.batch_write_hint)``.
+    batch_write_hint: int = 8
+
     @property
     @abc.abstractmethod
     def size(self) -> int:
@@ -98,6 +102,22 @@ class BackingStore(abc.ABC):
             pos += b.nbytes
         return got
 
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Write consecutive byte ranges starting at ``offset`` from each buf
+        — the gather source for a coalesced run of adjacent dirty pages
+        (DESIGN.md §13).
+
+        Default implementation loops :meth:`write_from` (one store operation
+        per buf); stores that can do better override it to issue a *single*
+        operation — one ``pwritev``, one extent walk, one latency charge —
+        and count one write.  Returns total bytes written.
+        """
+        done, pos = 0, offset
+        for b in bufs:
+            done += self.write_from(pos, b)
+            pos += b.nbytes
+        return done
+
     def flush(self) -> None:  # pragma: no cover - default no-op
         pass
 
@@ -127,6 +147,13 @@ class FileStore(BackingStore):
     """Single-file store using positioned I/O on a raw fd."""
 
     batch_read_hint = 32     # one preadv amortizes a syscall per page
+    batch_write_hint = 32    # one pwritev likewise
+
+    # preadv/pwritev reject iovec lists longer than IOV_MAX (POSIX floor
+    # and Linux value: 1024); batch calls chunk to this so callers with
+    # unbounded buf lists (e.g. ckpt.save_tree_to_store on a many-leaf
+    # pytree) don't hit EINVAL.
+    _IOV_MAX = 1024
 
     def __init__(self, path: str, size: int | None = None, create: bool = False):
         self.path = str(path)
@@ -170,7 +197,7 @@ class FileStore(BackingStore):
                     continue
                 pending.append(m[skip:] if skip else m)
                 skip = 0
-            n = os.preadv(self._fd, pending, offset + got)
+            n = os.preadv(self._fd, pending[: self._IOV_MAX], offset + got)
             if n <= 0:
                 break  # EOF — zero-fill the tail
             got += n
@@ -185,6 +212,27 @@ class FileStore(BackingStore):
         done = 0
         while done < len(mv):
             done += os.pwrite(self._fd, mv[done:], offset + done)
+        self._count_write(done)
+        return done
+
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one ``pwritev`` gather-write for the whole run."""
+        mvs = [memoryview(b).cast("B") for b in bufs]
+        want = sum(m.nbytes for m in mvs)
+        done = 0
+        while done < want:
+            # re-slice the iovec list past the bytes already written
+            pending, skip = [], done
+            for m in mvs:
+                if skip >= m.nbytes:
+                    skip -= m.nbytes
+                    continue
+                pending.append(m[skip:] if skip else m)
+                skip = 0
+            n = os.pwritev(self._fd, pending[: self._IOV_MAX], offset + done)
+            if n <= 0:  # pragma: no cover - pwritev never short-returns 0
+                break
+            done += n
         self._count_write(done)
         return done
 
@@ -258,6 +306,17 @@ class MultiFileStore(BackingStore):
         self._count_write(done)
         return done
 
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one extent walk for the whole run; each overlapping
+        extent receives a single (itself batched) member-store write instead
+        of one call per page."""
+        total = sum(b.nbytes for b in bufs)
+        done = 0
+        for store, s_off, b_off, n in self._segments(offset, total):
+            done += store.write_from_batch(s_off, _slice_bufs(bufs, b_off, n))
+        self._count_write(done)
+        return done
+
     def flush(self) -> None:
         for store, *_ in self._extents:
             store.flush()
@@ -310,6 +369,20 @@ class HostArrayStore(BackingStore):
         self._count_write(n)
         return n
 
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one lock hold + one pass over the array, counted as
+        one write."""
+        done, pos = 0, offset
+        with self._lock:
+            for b in bufs:
+                mv = b.view(np.uint8)
+                n = max(0, min(mv.nbytes, self._data.nbytes - pos))
+                self._data[pos : pos + n] = mv[:n]
+                done += n
+                pos += mv.nbytes
+        self._count_write(done)
+        return done
+
 
 class RemoteStore(BackingStore):
     """Latency/bandwidth-modeled wrapper (Lustre / network HDD tier, §5).
@@ -321,6 +394,7 @@ class RemoteStore(BackingStore):
     """
 
     batch_read_hint = 64     # deep batches: one latency charge per run
+    batch_write_hint = 64    # write-back runs likewise
 
     def __init__(self, inner: BackingStore, latency_s: float = 5e-3,
                  bandwidth_Bps: float = 200e6):
@@ -357,6 +431,15 @@ class RemoteStore(BackingStore):
         self._count_write(n)
         return n
 
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: the whole run pays ONE round-trip latency charge plus
+        streaming bandwidth — the coalesced write-back win for high-latency
+        tiers (DESIGN.md §13)."""
+        self._delay(sum(b.nbytes for b in bufs))
+        n = self.inner.write_from_batch(offset, bufs)
+        self._count_write(n)
+        return n
+
     def flush(self) -> None:
         self.inner.flush()
 
@@ -372,6 +455,7 @@ class SyntheticStore(BackingStore):
     """
 
     batch_read_hint = 32     # one generator invocation per run
+    batch_write_hint = 32    # one overlay walk per run
 
     def __init__(self, size: int, generator: Callable[[int, np.ndarray], None],
                  overlay_page: int = 1 << 20):
@@ -421,21 +505,38 @@ class SyntheticStore(BackingStore):
         self._count_read(total)
         return total
 
+    def _write_overlay_locked(self, offset: int, mv: np.ndarray) -> None:
+        """Scatter ``mv`` into overlay pages (``self._lock`` held)."""
+        p = self._overlay_page
+        pos = 0
+        while pos < mv.nbytes:
+            pg = (offset + pos) // p
+            od = self._overlay.get(pg)
+            if od is None:
+                od = np.zeros(p, np.uint8)
+                self._gen(pg * p, od)
+                self._overlay[pg] = od
+            lo = offset + pos
+            hi = min((pg + 1) * p, offset + mv.nbytes)
+            od[lo - pg * p : hi - pg * p] = mv[pos : pos + (hi - lo)]
+            pos += hi - lo
+
     def write_from(self, offset: int, buf: np.ndarray) -> int:
         mv = buf.view(np.uint8)
-        p = self._overlay_page
         with self._lock:
-            pos = 0
-            while pos < mv.nbytes:
-                pg = (offset + pos) // p
-                od = self._overlay.get(pg)
-                if od is None:
-                    od = np.zeros(p, np.uint8)
-                    self._gen(pg * p, od)
-                    self._overlay[pg] = od
-                lo = offset + pos
-                hi = min((pg + 1) * p, offset + mv.nbytes)
-                od[lo - pg * p : hi - pg * p] = mv[pos : pos + (hi - lo)]
-                pos += hi - lo
+            self._write_overlay_locked(offset, mv)
         self._count_write(mv.nbytes)
         return mv.nbytes
+
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        """Vectorized: one lock hold + one overlay walk for the whole run,
+        counted as one write."""
+        total, pos = 0, offset
+        with self._lock:
+            for b in bufs:
+                mv = b.view(np.uint8)
+                self._write_overlay_locked(pos, mv)
+                total += mv.nbytes
+                pos += mv.nbytes
+        self._count_write(total)
+        return total

@@ -28,8 +28,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.pattern import AccessPatternClassifier, Phase
+from ..kernels.page_gather.ops import page_gather
 from ..kernels.paged_attention.ops import paged_attention
 from .allocator import OutOfPages, PageAllocator
+
+
+class KVBlockLease:
+    """Zero-copy K/V block views for one sequence (DESIGN.md §13).
+
+    ``k``/``v`` are device arrays assembled by the ``page_gather`` kernel
+    straight from the pool through the sequence's block table — no host
+    staging copy, no per-page ``.at[].get()`` materialization.  While the
+    lease is live the sequence is pinned: ``release()`` (sequence free) and
+    window-prefix eviction are refused/deferred, mirroring the core pager's
+    lease-pinned-pages-are-ineligible-victims rule.
+    """
+
+    __slots__ = ("_cache", "seq_id", "pages", "k", "v", "_released")
+
+    def __init__(self, cache: "PagedKVCache", seq_id: int, pages: List[int],
+                 k: jax.Array, v: jax.Array):
+        self._cache = cache
+        self.seq_id = seq_id
+        self.pages = pages
+        self.k = k
+        self.v = v
+        self._released = False
+
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        self._cache._unpin_seq(self.seq_id)
+
+    def __enter__(self) -> "KVBlockLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
 
 
 @dataclasses.dataclass
@@ -84,6 +120,12 @@ class PagedKVCache:
         self.auto_evicted_pages = 0
         self._meta_lock = threading.Lock()
         self._meta_contended = 0
+        # Zero-copy lease accounting (DESIGN.md §13): per-sequence pin
+        # counts plus the same counter names the core pager exposes, so
+        # serving telemetry reads uniformly across both tiers.
+        self._seq_pins: Dict[int, int] = {}
+        self._lease_count = 0
+        self._lease_blocked_evictions = 0
 
     @contextlib.contextmanager
     def _locked_meta(self):
@@ -168,15 +210,58 @@ class PagedKVCache:
 
     def release(self, seq_id: int) -> int:
         with self._locked_meta():
+            if self._seq_pins.get(seq_id, 0) > 0:
+                raise RuntimeError(
+                    f"sequence {seq_id} has live KV leases; release the "
+                    f"leases before freeing the sequence")
             self.seq_len.pop(seq_id, None)
             self.pages_dropped.pop(seq_id, None)
             self._classifiers.pop(seq_id, None)
             return self.allocator.free_seq(seq_id)
 
+    # ---------------------------------------------- zero-copy leases (§13)
+
+    def lease_kv(self, seq_id: int,
+                 layer: Optional[int] = None) -> KVBlockLease:
+        """Lease the sequence's K/V blocks as gathered device views.
+
+        One ``page_gather`` launch per pool (block-table indirection
+        in-kernel); for ``layer=None`` the gather spans the layer axis.  No
+        host staging: the views never round-trip through numpy.  The
+        sequence is pinned against free/window-eviction until release.
+        """
+        with self._locked_meta():
+            pages = list(self.allocator.pages_of(seq_id))
+            self._seq_pins[seq_id] = self._seq_pins.get(seq_id, 0) + 1
+            self._lease_count += 1
+        idx = jnp.asarray(pages, jnp.int32)
+        if layer is None:
+            k = jnp.take(self.k_pool, idx, axis=1)
+            v = jnp.take(self.v_pool, idx, axis=1)
+        else:
+            k = page_gather(self.k_pool[layer], idx)
+            v = page_gather(self.v_pool[layer], idx)
+        return KVBlockLease(self, seq_id, pages, k, v)
+
+    def _unpin_seq(self, seq_id: int) -> None:
+        with self._locked_meta():
+            n = self._seq_pins.get(seq_id, 0) - 1
+            if n <= 0:
+                self._seq_pins.pop(seq_id, None)
+            else:
+                self._seq_pins[seq_id] = n
+
     def evict_window_prefix(self, seq_id: int, window: int) -> List[int]:
-        """Sliding-window policy: free pages fully behind the window."""
+        """Sliding-window policy: free pages fully behind the window.
+
+        Refused (empty result + ``lease_blocked_evictions``) while the
+        sequence holds live KV leases — the lease's view of the block table
+        must stay stable."""
         ps = self.cfg.page_size
         with self._locked_meta():
+            if self._seq_pins.get(seq_id, 0) > 0:
+                self._lease_blocked_evictions += 1
+                return []
             keep_from = max(0, self.seq_len.get(seq_id, 0) - window)
             dropped = self.pages_dropped.get(seq_id, 0)
             evictable = keep_from // ps - dropped
@@ -227,6 +312,10 @@ class PagedKVCache:
                 "sequences": len(self.seq_len),
                 "auto_evicted_pages": self.auto_evicted_pages,
                 "host_lock_contended": self._meta_contended,
+                "leases": self._lease_count,
+                "lease_blocked_evictions": self._lease_blocked_evictions,
+                "leased_sequences": sum(1 for n in self._seq_pins.values()
+                                        if n > 0),
                 "phases": {s: c.snapshot()["phase"]
                            for s, c in self._classifiers.items()},
             }

@@ -14,6 +14,13 @@ AccessPatternClassifier, and the readahead depth follows the detected phase
 random (e.g. speculative-decode layer skipping) so slots are not wasted on
 layers that will not be used.
 
+``host_layers`` may be a plain list of pytrees or a
+:class:`RegionLayerSource` — the zero-copy route (DESIGN.md §13) where
+layer bytes live behind a UMap region and each fetch pins the layer's
+pages with ``region.lease_run``, hands the lease views (no staging memcpy)
+to ``jax.device_put``, and assembles the layer on device via
+``kernels/page_gather`` block-table indirection.
+
 Filler concurrency mirrors the sharded core (DESIGN.md §12): ``num_fillers``
 worker threads, each with its OWN deque + condition, route transfers by
 layer index; an idle filler steals from the busiest peer, so a burst of
@@ -26,14 +33,168 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core.pattern import AccessPatternClassifier
+from ..kernels.page_gather.ops import page_gather, page_scatter
 
 PyTree = Any
+
+
+def pack_layer_arrays(arrays: Sequence[np.ndarray],
+                      page_size: int) -> Tuple[np.ndarray, List[dict]]:
+    """Pack per-layer arrays page-aligned into one flat byte buffer.
+
+    Returns ``(buf, specs)`` where ``buf`` is the byte image to back a
+    UMap store (``HostArrayStore(buf)`` / written to a ``FileStore``) and
+    ``specs[i]`` records layer ``i``'s shape/dtype/page extent for
+    :class:`RegionLayerSource`.  Every layer starts on a page boundary and
+    is zero-padded to a whole number of pages, so lease views are always
+    full aligned pages (the zero-staging-copy case, DESIGN.md §13).
+    """
+    dtype = np.dtype(arrays[0].dtype)
+    if any(np.dtype(a.dtype) != dtype for a in arrays):
+        raise ValueError("pack_layer_arrays requires a uniform dtype")
+    if page_size % dtype.itemsize:
+        raise ValueError(
+            f"page_size {page_size} not a multiple of itemsize {dtype.itemsize}")
+    specs: List[dict] = []
+    chunks: List[np.ndarray] = []
+    page = 0
+    for a in arrays:
+        flat = np.ascontiguousarray(a).view(np.uint8).reshape(-1)
+        npages = -(-flat.nbytes // page_size)
+        pad = npages * page_size - flat.nbytes
+        chunks.append(flat)
+        if pad:
+            chunks.append(np.zeros(pad, np.uint8))
+        specs.append({"shape": tuple(a.shape), "dtype": str(dtype),
+                      "first_page": page, "npages": npages})
+        page += npages
+    return np.concatenate(chunks), specs
+
+
+class RegionLayerSource:
+    """Host layers behind a UMap region, assembled on device by page_gather.
+
+    Drop-in for ``LayerWeightPager``'s ``host_layers`` sequence: item ``i``
+    is layer ``i``'s device array.  The fetch path is the zero-copy route
+    (DESIGN.md §13): ``region.lease_run`` pins the layer's pages and hands
+    the lease views — aliases of the page buffer, no staging memcpy —
+    straight to ``jax.device_put``; the resulting device pages are
+    scattered into a device-side page pool (``page_scatter``) and the layer
+    is assembled through block-table indirection (``page_gather``).  Leases
+    are released only after the host->device copies complete, so eviction
+    cannot recycle a buffer slot mid-transfer.
+
+    The region's buffer must be able to pin a whole layer at once
+    (``lease_run`` caps runs at half the buffer); the device pool holds
+    ``pool_pages`` pages (default: enough for every layer) evicted
+    layer-at-a-time FIFO.
+    """
+
+    def __init__(self, region, specs: Sequence[dict], device=None,
+                 pool_pages: Optional[int] = None):
+        self.region = region
+        self.specs = list(specs)
+        self.device = device or jax.devices()[0]
+        self.dtype = np.dtype(self.specs[0]["dtype"])
+        if any(np.dtype(s["dtype"]) != self.dtype for s in self.specs):
+            raise ValueError("RegionLayerSource requires a uniform dtype")
+        self.page_elems = region.page_size // self.dtype.itemsize
+        need = max(s["npages"] for s in self.specs)
+        self.pool_pages = (sum(s["npages"] for s in self.specs)
+                           if pool_pages is None else pool_pages)
+        if self.pool_pages < need:
+            raise ValueError(
+                f"pool_pages {self.pool_pages} cannot hold the largest "
+                f"layer ({need} pages)")
+        self._pool = jnp.zeros((self.pool_pages, self.page_elems),
+                               jnp.dtype(self.dtype))
+        self._layer_slots: Dict[int, List[int]] = {}   # layer -> pool slots
+        self._fifo: List[int] = []                     # layer install order
+        self._free = list(range(self.pool_pages - 1, -1, -1))
+        self._lock = threading.Lock()
+        # Layers whose host fetch + H2D transfer is in flight: the lock is
+        # NOT held across the transfer (that would serialize the weight
+        # pager's filler pool); duplicate fetchers wait on the event.
+        self._inflight: Dict[int, threading.Event] = {}
+        self.staging_copies = 0     # non-lease fallback fetches (telemetry)
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def _take_slots(self, n: int) -> List[int]:
+        """Pop ``n`` pool slots, evicting oldest layers (lock held)."""
+        while len(self._free) < n:
+            victim = self._fifo.pop(0)
+            self._free.extend(self._layer_slots.pop(victim))
+        return [self._free.pop() for _ in range(n)]
+
+    def _fetch_pages(self, spec: dict) -> List[jax.Array]:
+        """Layer pages as device arrays — zero host staging via leases."""
+        if self.region.service.config.zero_copy_leases:
+            with self.region.lease_run(spec["first_page"],
+                                       spec["npages"]) as run:
+                dev = [jax.device_put(v.view(self.dtype), self.device)
+                       for v in run.views]
+                # device_put dispatches asynchronously FROM the leased
+                # buffer; the slots must stay pinned until the copies land.
+                for d in dev:
+                    d.block_until_ready()
+            return dev
+        # Copy-backed fallback (UMAP_ZERO_COPY_LEASES=0): one staging
+        # memcpy per page through region.read.
+        ps = self.region.page_size
+        self.staging_copies += spec["npages"]
+        return [jax.device_put(
+                    self.region.read((spec["first_page"] + i) * ps, ps)
+                    .view(self.dtype), self.device)
+                for i in range(spec["npages"])]
+
+    def __getitem__(self, i: int) -> jax.Array:
+        spec = self.specs[i]
+        while True:
+            owner = False
+            with self._lock:
+                slots = self._layer_slots.get(i)
+                if slots is not None:
+                    # Gather under the lock: `flat` references the current
+                    # immutable pool value, so later scatters/evictions
+                    # cannot tear it.
+                    flat = page_gather(self._pool,
+                                       jnp.asarray(slots, jnp.int32))
+                    break
+                ev = self._inflight.get(i)
+                if ev is None:                # this thread fetches
+                    ev = self._inflight[i] = threading.Event()
+                    owner = True
+            if owner:
+                try:
+                    # Lease + H2D transfer with NO lock held — concurrent
+                    # fillers fetching other layers genuinely overlap.
+                    dev_pages = self._fetch_pages(spec)
+                    with self._lock:
+                        slots = self._take_slots(spec["npages"])
+                        self._pool = page_scatter(
+                            self._pool, jnp.asarray(slots, jnp.int32),
+                            jnp.stack(dev_pages))
+                        self._layer_slots[i] = slots
+                        self._fifo.append(i)
+                finally:
+                    with self._lock:
+                        self._inflight.pop(i, None)
+                    ev.set()
+            else:
+                ev.wait(timeout=0.05)
+            # loop re-checks _layer_slots: covers publish, fetch failure
+            # (waiters become the next owner), and eviction races
+        nelems = int(np.prod(spec["shape"])) if spec["shape"] else 1
+        return flat.reshape(-1)[:nelems].reshape(spec["shape"])
 
 
 class LayerWeightPager:

@@ -355,3 +355,41 @@ def test_per_shard_counters_aggregate_in_snapshot():
         assert st["page_hits"] >= npages
     finally:
         uunmap(r)
+
+
+def test_snapshot_key_parity_between_aggregate_and_per_shard():
+    """Every shard-owned counter must appear both in the aggregate snapshot
+    and in every per_shard dict, and the aggregate must equal the per-shard
+    sum — the guard against counter-drift regressions like the seed's
+    outside-lock ``writebacks`` increment (satellite task).  New counters
+    (leases, write-back coalescing) are covered automatically."""
+    from repro.core.pager import _SHARD_COUNTERS
+
+    npages, ps = 64, 4096
+    store = HostArrayStore((np.arange(npages * ps) % 251).astype(np.uint8))
+    cfg = UMapConfig(page_size=ps, buffer_size=npages * ps, num_fillers=2,
+                     num_evictors=1, shards=8)
+    r = umap(store, config=cfg)
+    try:
+        for pno in range(npages):
+            r.read(pno * ps, 64)
+        for pno in range(0, npages, 2):
+            r.write(pno * ps, np.full(32, 5, np.uint8))
+        with r.lease(1):
+            pass
+        r.flush()
+        st = r.stats()
+        assert set(_SHARD_COUNTERS) <= set(st), \
+            f"aggregate missing {set(_SHARD_COUNTERS) - set(st)}"
+        for s in st["per_shard"]:
+            assert set(s) == set(_SHARD_COUNTERS), \
+                f"per_shard keys drifted: {set(s) ^ set(_SHARD_COUNTERS)}"
+        for key in _SHARD_COUNTERS:
+            assert st[key] == sum(s[key] for s in st["per_shard"]), key
+        # the new §13 counters are present on both sides
+        for key in ("leases", "lease_blocked_evictions",
+                    "coalesced_writebacks", "writeback_pages"):
+            assert key in st and key in st["per_shard"][0]
+        assert st["leases"] == 1
+    finally:
+        uunmap(r)
