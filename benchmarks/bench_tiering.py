@@ -1,0 +1,188 @@
+"""Tiered-store benchmark: heat-driven migration on a skewed fault storm
+(DESIGN.md §14).
+
+N poster threads issue single-page reads with a hot/cold skew (90% of
+faults land on the hottest 10% of the working set) against a region whose
+page buffer is far smaller than even the hot set, so hot pages re-fault
+continuously.  Two configurations run the identical workload:
+
+  slow-only   the region sits directly on the latency-modeled slow store —
+              every fault pays the slow tier's round trip.
+  tiered      a ``TieredStore`` composes a host-memory fast tier sized at
+              10% of the working set over the same slow store; the pager's
+              migration engine promotes the hot extents from the demand-
+              fault heat signal, after which ~90% of fills hit host memory.
+
+The reported metric is *fill throughput* (demand fills per second) over the
+storm; the per-tier byte counters in the JSON show the mechanism (fast-tier
+bytes absorb the hot set).  Every read is verified against the generator
+pattern, so the storm doubles as the mid-migration byte-exactness
+acceptance check: a torn extent (promotion racing a fault) would fail the
+compare, not just slow down.
+
+Run standalone (``python -m benchmarks.bench_tiering [--smoke|--full]``)
+or via ``python -m benchmarks.run --only tiering``.  Rows land in
+``experiments/bench/tiering.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+_EXPECTED_CACHE: dict = {}
+
+
+def _expected(page: int, page_size: int) -> np.ndarray:
+    out = _EXPECTED_CACHE.get((page, page_size))
+    if out is None:
+        idx = np.arange(page * page_size, (page + 1) * page_size,
+                        dtype=np.uint64)
+        out = _EXPECTED_CACHE[(page, page_size)] = (idx % 249).astype(np.uint8)
+    return out
+
+
+def _storm_once(tiered: bool, threads: int, npages: int, page_size: int,
+                ops_per_thread: int, latency_s: float):
+    from repro.core import (HostArrayStore, RemoteStore, TieredStore,
+                            UMapConfig, umap, uunmap)
+
+    total = npages * page_size
+    idx = np.arange(total, dtype=np.uint64)
+    inner = HostArrayStore((idx % 249).astype(np.uint8))
+    slow = RemoteStore(inner, latency_s=latency_s, bandwidth_Bps=2e9)
+    extent_size = 4 * page_size
+    if tiered:
+        fast_bytes = total // 10                 # fast tier = 10% of working set
+        store = TieredStore(
+            HostArrayStore(np.zeros(fast_bytes, np.uint8)), slow,
+            fast_bytes=fast_bytes, extent_size=extent_size,
+            promote_on_read=False)               # placement is heat-driven only
+    else:
+        store = slow
+    # Page buffer far below the hot set: hot pages keep re-faulting, which
+    # is both the heat signal and the fill traffic under measurement.
+    cfg = UMapConfig(page_size=page_size, buffer_size=(npages // 25) * page_size,
+                     num_fillers=4, num_evictors=1, shards=4)
+    region = umap(store, config=cfg)
+
+    hot_pages = max(1, npages // 10)
+    barrier = threading.Barrier(threads + 1)
+    errors: List[str] = []
+
+    def poster(tid: int) -> None:
+        rng = np.random.default_rng(1000 + tid)
+        barrier.wait()
+        for i in range(ops_per_thread):
+            if rng.random() < 0.9:
+                p = int(rng.integers(0, hot_pages))
+            else:
+                p = int(rng.integers(hot_pages, npages))
+            got = region.read(p * page_size, page_size)
+            if not np.array_equal(got, _expected(p, page_size)):
+                errors.append(f"byte mismatch on page {p} (op {i})")
+                return
+
+    ts = [threading.Thread(target=poster, args=(t,)) for t in range(threads)]
+    [t.start() for t in ts]
+    barrier.wait()
+    t0 = time.perf_counter()
+    [t.join() for t in ts]
+    dt = time.perf_counter() - t0
+    if errors:
+        raise AssertionError("; ".join(errors[:3]))
+    st = region.stats()
+    fills = st["demand_faults"]
+    stats = {
+        "demand_faults": fills,
+        "tier_promotions": st["tier_promotions"],
+        "tier_demotions": st["tier_demotions"],
+        "io_errors": st["io_errors"],
+        "slow_store_reads": slow.num_reads,
+    }
+    if tiered:
+        stats.update({k: v for k, v in store.tier_stats().items()
+                      if k in ("resident_extents", "promotions", "demotions",
+                               "migration_aborts", "fast_bytes_read",
+                               "slow_bytes_read")})
+    uunmap(region)
+    return dt, fills, stats
+
+
+def run(quick: bool = True) -> List:
+    from .common import Row
+
+    threads = 4
+    if quick:
+        npages, ops, reps = 500, 400, 3
+    else:
+        npages, ops, reps = 1000, 1000, 5
+    page_size = 4096
+    # The slow tier models the paper's network-HDD/Lustre tier
+    # (StoreProfile.lustre_hdd: 5 ms per op) — deep enough that store
+    # latency, not Python fault machinery, dominates a miss.
+    latency_s = 5e-3
+    configs = (("slow-only", False), ("tiered", True))
+
+    # Interleaved, paired reps (same discipline as bench_fault_storm):
+    # configs run back-to-back within each rep so machine drift cancels in
+    # the per-rep ratios; the median rep is reported.
+    runs: Dict[str, list] = {label: [] for label, _ in configs}
+    for _ in range(reps):
+        for label, tiered in configs:
+            runs[label].append(
+                _storm_once(tiered=tiered, threads=threads, npages=npages,
+                            page_size=page_size, ops_per_thread=ops,
+                            latency_s=latency_s))
+
+    def med(lst, key):
+        s = sorted(lst, key=key)
+        return s[len(s) // 2]
+
+    rows: List[Row] = []
+    for label, tiered in configs:
+        dt, fills, stats = med(runs[label], key=lambda r: r[1] / r[0])
+        rows.append(Row("tiering", label, page_size, dt, {
+            "threads": threads,
+            "npages": npages,
+            "hot_fraction": 0.1,
+            "fast_tier_fraction": 0.1,
+            "fills_per_s": round(fills / dt, 1) if dt else float("nan"),
+            **stats,
+        }))
+    per_rep = [
+        (runs["tiered"][i][1] / runs["tiered"][i][0])
+        / (runs["slow-only"][i][1] / runs["slow-only"][i][0])
+        for i in range(reps)
+    ]
+    rows.append(Row("tiering", "summary", page_size, 0.0, {
+        "threads": threads,
+        "speedup_tiered_vs_slow_only": round(sorted(per_rep)[reps // 2], 2),
+    }))
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import print_rows, save_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger working set")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick storm, JSON artifact")
+    args = ap.parse_args(argv)
+    rows = run(quick=not args.full)
+    path = save_rows("tiering", rows)
+    print_rows(rows)
+    print(f"# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -11,6 +11,8 @@
               steal/contention counters (DESIGN.md §12)
   writeback   §3.5    dirty storm: per-page vs coalesced write-back
               (DESIGN.md §13)
+  tiering     §3.4    skewed fault storm: heat-driven migration, tiered
+              vs slow-tier-only (DESIGN.md §14)
   fault_overhead  µs/fault microbenchmark feeding the PageSizeAdvisor
 
 Prints ``name,us_per_call,derived`` CSV and writes JSON rows under
@@ -78,6 +80,7 @@ SUITES = {
     "paged_kv": ("bench_paged_kv", "TPU transplant"),
     "fault_storm": ("bench_fault_storm", "§3.3 scaling"),
     "writeback": ("bench_writeback", "§3.5 write-back"),
+    "tiering": ("bench_tiering", "§3.4 tiered store"),
 }
 
 
@@ -125,6 +128,12 @@ def main(argv=None) -> int:
                     ratio = summary.extra["speedup_batched_vs_per_page"]
                     print(f"# {name} ({fig}): drain-throughput speedup "
                           f"batched vs per-page = {ratio:.2f}x", flush=True)
+            elif name == "tiering":              # tiered vs slow-tier-only
+                summary = next((r for r in rows if r.config == "summary"), None)
+                if summary:
+                    ratio = summary.extra["speedup_tiered_vs_slow_only"]
+                    print(f"# {name} ({fig}): fill-throughput speedup "
+                          f"tiered vs slow-only = {ratio:.2f}x", flush=True)
         except Exception as e:  # noqa: BLE001
             all_ok = False
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)

@@ -157,6 +157,13 @@ class AsyncCheckpointer:
     With ``store=`` set, writers persist each step into that
     ``BackingStore`` via :func:`save_tree_to_store` — the whole tree as ONE
     batched write (DESIGN.md §13) — instead of one ``.npy`` file per leaf.
+    ``tier_fast_bytes=`` additionally wraps the store in a ``TieredStore``
+    (DESIGN.md §14) with a host-memory fast tier of that budget and
+    ``promote_on_write``: the newest checkpoint image is promoted into the
+    fast tier as it is written, so a restore taken shortly after a save (the
+    common preemption-recovery path) reads from host memory instead of the
+    slow tier, while ``save_tree_to_store``'s flush still pushes every byte
+    through to the slow tier for durability.
     Store saves are double-buffered (alternating halves of the store;
     ``save_async`` rejects trees larger than half the store) and
     serialized across writer threads, and ``store_manifest`` is published
@@ -170,11 +177,19 @@ class AsyncCheckpointer:
 
     def __init__(self, ckpt_dir: str | Path, writers: int = 1,
                  high_water: int = 2, low_water: int = 1, keep: int = 3,
-                 store=None):
+                 store=None, tier_fast_bytes: int = 0):
         self.ckpt_dir = Path(ckpt_dir)
         self.high_water = high_water
         self.low_water = low_water
         self.keep = keep
+        if store is not None and tier_fast_bytes > 0:
+            from ..core.store import HostArrayStore, TieredStore
+            if not isinstance(store, TieredStore):
+                store = TieredStore(
+                    HostArrayStore(np.zeros(tier_fast_bytes, np.uint8)),
+                    store, fast_bytes=tier_fast_bytes,
+                    extent_size=min(1 << 20, tier_fast_bytes),
+                    promote_on_write=True)
         self.store = store
         self.store_manifest: Optional[dict] = None
         self._store_lock = threading.Lock()    # serialize store-mode saves
@@ -214,6 +229,26 @@ class AsyncCheckpointer:
             self._pending += 1
         self._q.put((step, host_tree))
 
+    def _free_fast_tier(self) -> None:
+        """Demote every resident fast-tier extent before a save (tiered
+        store mode only).
+
+        This checkpointer owns its (engine-less) ``TieredStore``, so the
+        PREVIOUS save's extents would otherwise hold the fast tier forever
+        and ``promote_on_write`` — the 'newest image restores from host
+        memory' promise — would find no free slots after the first save.
+        Every resident extent is clean post-flush (``save_tree_to_store``
+        flushes), so demotion is a pure metadata flip; the previous
+        image's durability lives in the slow tier, and a restore taken
+        *inside* the save window reads it from there (the documented
+        two-slot overlap caveat) — the promise applies between saves.
+        """
+        from ..core.store import TieredStore
+        if not isinstance(self.store, TieredStore):
+            return
+        for ext in self.store.resident_extents():
+            self.store.demote(ext)
+
     def _writer(self) -> None:
         while True:
             item = self._q.get()
@@ -227,6 +262,7 @@ class AsyncCheckpointer:
                     # intact until the new one is durable.
                     offset = self._store_slot * (self.store.size // 2)
                     self._store_slot ^= 1
+                    self._free_fast_tier()
                     manifest = save_tree_to_store(self.store, tree,
                                                   offset=offset)
                     manifest["step"] = step

@@ -24,6 +24,7 @@ from .hints import (  # noqa: F401
     AccessAdvice,
     PageSizeAdvisor,
     StoreProfile,
+    TierHint,
     WorkloadProfile,
     advice_for_phase,
     apply_advice,
@@ -47,10 +48,12 @@ from .pager import PagingService, ServiceStats  # noqa: F401
 from .region import UMapArrayView, UMapRegion, umap, uunmap  # noqa: F401
 from .store import (  # noqa: F401
     BackingStore,
+    FaultyStore,
     FileStore,
     HostArrayStore,
     MultiFileStore,
     RemoteStore,
     SyntheticStore,
+    TieredStore,
 )
 from .watermark import WatermarkMonitor  # noqa: F401

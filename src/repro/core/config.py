@@ -20,6 +20,13 @@ Extensions beyond the paper's list (this repo's adaptive engine, DESIGN.md ยง8โ
   UMAP_MAX_WRITEBACK_BATCH            max adjacent dirty pages per coalesced write-back (default 16; 1 disables)
   UMAP_ZERO_COPY_LEASES               zero-copy lease views into the page buffer (default on)
   UMAP_MAX_LEASE_RUN                  max pages a single lease_run may pin (default 64)
+  UMAP_WRITEBACK_RETRIES              write-back attempts before a page is quarantined (default 3)
+  UMAP_TIER_FAST_BYTES                default fast-tier budget for TieredStore.from_config (default 0 = off)
+  UMAP_TIER_EXTENT                    tier migration extent size in bytes (default 1M)
+  UMAP_TIER_INTERVAL_MS               migration-engine cycle interval (default 50 ms)
+  UMAP_TIER_DECAY                     per-cycle heat decay factor (default 0.8)
+  UMAP_TIER_PROMOTE_HEAT              heat threshold for promotion (default 2.0)
+  UMAP_TIER_MAX_MIGRATIONS            max promote/demote pairs per cycle (default 8)
 
 Programmatic control mirrors the paper's ``umapcfg_set_xx`` interfaces:
 construct :class:`UMapConfig` directly or call :func:`from_env`.
@@ -143,6 +150,32 @@ class UMapConfig:
     # contend for the same slots.
     max_lease_run: int = 64                  # UMAP_MAX_LEASE_RUN
 
+    # --- I/O error propagation (DESIGN.md ยง14.4) ----------------------------
+    # A failed write-back is retried this many times (the page stays
+    # CLEANING, re-posted to the cleaner queue); past the bound the page is
+    # quarantined: resident + dirty, excluded from cleaning and eviction,
+    # and flush_region raises.  Fill (read) failures are never retried by
+    # the pager โ the error propagates as IOError to every fault waiter
+    # and the *application's* retry is a fresh fault.
+    writeback_retries: int = 3               # UMAP_WRITEBACK_RETRIES
+
+    # --- tiered store + heat-driven migration (DESIGN.md ยง14) ---------------
+    # Regions whose store is a TieredStore feed per-shard access-heat
+    # counters (bumped on demand faults, keyed by store extent); a
+    # dedicated migration thread decays them every `tier_interval_s` and
+    # transactionally promotes hot extents / demotes cold ones.
+    # Steady-state heat of an extent faulting at rate r is
+    # r * tier_interval_s / (1 - tier_decay); the defaults promote extents
+    # sustaining >= ~8 demand faults/s (heat 2.0 at 50 ms cycles, 0.8
+    # decay โ half-life ~0.16 s) while extents faulting 10x slower stay an
+    # order of magnitude below the threshold.
+    tier_fast_bytes: int = 0                 # UMAP_TIER_FAST_BYTES (from_config budget)
+    tier_extent_size: int = 1 << 20          # UMAP_TIER_EXTENT
+    tier_interval_s: float = 0.05            # UMAP_TIER_INTERVAL_MS / 1000
+    tier_decay: float = 0.8                  # UMAP_TIER_DECAY (heat *= decay per cycle)
+    tier_promote_heat: float = 2.0           # UMAP_TIER_PROMOTE_HEAT
+    tier_max_migrations: int = 8             # UMAP_TIER_MAX_MIGRATIONS per cycle
+
     # --- sharded concurrency (DESIGN.md ยง12) --------------------------------
     # Page metadata (table + slot free lists + eviction state) is striped
     # into `shards` independent lock domains keyed by hash(PageKey), so
@@ -183,6 +216,25 @@ class UMapConfig:
             raise ValueError(f"pattern_window must be >= 4, got {self.pattern_window}")
         if self.shards < 0:
             raise ValueError(f"shards must be >= 0 (0 = auto), got {self.shards}")
+        if self.writeback_retries < 1:
+            raise ValueError(
+                f"writeback_retries must be >= 1, got {self.writeback_retries}")
+        if self.tier_extent_size < 1:
+            raise ValueError(
+                f"tier_extent_size must be >= 1, got {self.tier_extent_size}")
+        if self.tier_interval_s <= 0:
+            raise ValueError(
+                f"tier_interval_s must be positive, got {self.tier_interval_s}")
+        if not (0.0 < self.tier_decay < 1.0):
+            raise ValueError(
+                f"tier_decay must be in (0, 1), got {self.tier_decay}")
+        if self.tier_promote_heat <= 0:
+            raise ValueError(
+                f"tier_promote_heat must be positive, "
+                f"got {self.tier_promote_heat}")
+        if self.tier_max_migrations < 1:
+            raise ValueError(
+                f"tier_max_migrations must be >= 1, got {self.tier_max_migrations}")
 
     @property
     def num_slots(self) -> int:
@@ -252,6 +304,20 @@ class UMapConfig:
                                       in ("1", "true", "yes", "on"))
         if "UMAP_MAX_LEASE_RUN" in env:
             kw["max_lease_run"] = int(env["UMAP_MAX_LEASE_RUN"])
+        if "UMAP_WRITEBACK_RETRIES" in env:
+            kw["writeback_retries"] = int(env["UMAP_WRITEBACK_RETRIES"])
+        if "UMAP_TIER_FAST_BYTES" in env:
+            kw["tier_fast_bytes"] = parse_size(env["UMAP_TIER_FAST_BYTES"])
+        if "UMAP_TIER_EXTENT" in env:
+            kw["tier_extent_size"] = parse_size(env["UMAP_TIER_EXTENT"])
+        if "UMAP_TIER_INTERVAL_MS" in env:
+            kw["tier_interval_s"] = float(env["UMAP_TIER_INTERVAL_MS"]) / 1000.0
+        if "UMAP_TIER_DECAY" in env:
+            kw["tier_decay"] = float(env["UMAP_TIER_DECAY"])
+        if "UMAP_TIER_PROMOTE_HEAT" in env:
+            kw["tier_promote_heat"] = float(env["UMAP_TIER_PROMOTE_HEAT"])
+        if "UMAP_TIER_MAX_MIGRATIONS" in env:
+            kw["tier_max_migrations"] = int(env["UMAP_TIER_MAX_MIGRATIONS"])
         kw.update(overrides)
         return cls(**kw)
 

@@ -65,6 +65,31 @@ ADVICE_SETTINGS = {
 }
 
 
+class TierHint(enum.Enum):
+    """Tier-placement hints for ``TieredStore``-backed regions (§14.3).
+
+    The migration engine normally ranks extents by decayed demand-fault
+    heat; these hints let the application override that inference for a
+    byte range (``region.advise(tier_hint=..., offset=, nbytes=)``):
+
+      HOT       seed the range with promote-threshold heat — migrate it to
+                the fast tier ahead of observed demand (e.g. the partition
+                about to be sorted).
+      COLD      zero the range's heat and queue demotion — reclaim fast-
+                tier slots from data the app knows it is done with.
+      PIN_FAST  promote at top priority AND pin: demotion refuses pinned
+                extents, so the range stays fast-tier-resident under any
+                pressure (e.g. embedding tables every request touches).
+
+    Constructible from the plain strings ``"hot"`` / ``"cold"`` /
+    ``"pin_fast"`` — ``TierHint("hot") is TierHint.HOT``.
+    """
+
+    HOT = "hot"
+    COLD = "cold"
+    PIN_FAST = "pin_fast"
+
+
 def apply_advice(config: UMapConfig, advice: AccessAdvice) -> UMapConfig:
     """Bake an advice's settings into a config (the paper's static path)."""
     return config.replace(**ADVICE_SETTINGS[advice])

@@ -60,6 +60,16 @@ Engine extensions beyond the paper's static design (DESIGN.md §8–9, §13):
     with ONE ``BackingStore.write_from_batch`` call; ``flush_region``
     shares the same pipeline.  ``config.max_writeback_batch=1`` restores
     one-write-per-page.
+  * **Heat-driven tier migration** (DESIGN.md §14) — regions backed by a
+    ``TieredStore`` feed per-shard access-heat counters from the demand-
+    fault stream; a dedicated migration thread decays them each cycle and
+    transactionally promotes hot extents into / demotes cold extents out
+    of the fast tier.  ``region.advise(tier_hint=...)`` overrides heat.
+  * **I/O error propagation** (DESIGN.md §14.4) — fill failures raise
+    ``IOError`` at every blocked fault site (``entry.error``); write-back
+    failures retry boundedly, then quarantine the page and make
+    ``flush_region`` raise.  Failing stores can no longer cause silent
+    infinite re-fault loops or stranded dirty pages.
 
 The ``mmap_compat`` configuration freezes this machinery to kernel-mmap
 semantics (synchronous resolution on the faulting thread serialized on an
@@ -103,15 +113,18 @@ _SHARD_COUNTERS = (
     "prefetch_hits", "evictions", "writebacks", "coalesced_fills",
     "coalesced_pages", "lock_contended", "fill_stalls",
     "coalesced_writebacks", "writeback_pages", "leases",
-    "lease_blocked_evictions",
+    "lease_blocked_evictions", "io_errors", "writeback_errors",
+    "quarantined_pages",
 )
 
 # Service-level counters: each has a single writer thread (watermark
-# monitor, classifier path under service.lock) — except fill_queue_peak,
-# a telemetry-only racy max documented in _submit_fill_many.  Steal
-# accounting lives in per-filler single-writer dicts instead.
+# monitor, classifier path under service.lock, the tier-migration thread
+# for tier_*) — except fill_queue_peak, a telemetry-only racy max
+# documented in _submit_fill_many.  Steal accounting lives in per-filler
+# single-writer dicts instead.
 _SERVICE_COUNTERS = (
     "watermark_flushes", "fill_queue_peak", "pattern_transitions",
+    "tier_promotions", "tier_demotions", "tier_errors",
 )
 
 
@@ -138,7 +151,13 @@ class ServiceStats:
     writeback_pages: int = 0        # pages written via batched write-backs
     leases: int = 0                 # zero-copy leases granted (DESIGN.md §13)
     lease_blocked_evictions: int = 0  # victim/clean skips due to live leases
+    io_errors: int = 0              # fills that died on a store exception (§14.4)
+    writeback_errors: int = 0       # failed write-back attempts (§14.4)
+    quarantined_pages: int = 0      # pages quarantined after retry exhaustion
     pattern_transitions: int = 0    # classifier-driven retunes applied
+    tier_promotions: int = 0        # extents migrated into the fast tier (§14)
+    tier_demotions: int = 0         # extents migrated out of the fast tier
+    tier_errors: int = 0            # migration cycles/ops that died on store I/O
     shards: int = 1                 # metadata stripe count
     steals: int = 0                 # work-stealing events (idle filler stole)
     stolen_work: int = 0            # fill work items moved by stealing
@@ -158,7 +177,8 @@ class ServiceStats:
 class _Shard:
     """One metadata stripe: lock, condition, table, policy, slots, counters."""
 
-    __slots__ = ("index", "lock", "cond", "table", "policy", "free", "counters")
+    __slots__ = ("index", "lock", "cond", "table", "policy", "free", "counters",
+                 "heat")
 
     def __init__(self, index: int, policy_name: str):
         self.index = index
@@ -168,6 +188,12 @@ class _Shard:
         self.policy: EvictionPolicy = make_policy(policy_name)
         self.free: List[int] = []        # buffer slots owned by this shard
         self.counters: Dict[str, int] = {k: 0 for k in _SHARD_COUNTERS}
+        # Access-heat accounting for tiered regions (DESIGN.md §14.1):
+        # (region_id, extent_no) -> decayed demand-fault count, mutated
+        # under this shard's lock, decayed + aggregated by the migration
+        # thread.  Empty (zero overhead) unless a TieredStore region is
+        # registered.
+        self.heat: Dict[tuple, float] = {}
 
 
 class _FillWork:
@@ -227,6 +253,14 @@ class PagingService:
         # dirty pages drain through here (watermark backpressure or direct
         # filler pressure when a shard runs out of clean victims).
         self._clean_q: "queue.Queue" = queue.Queue()
+
+        # Tier-migration engine (DESIGN.md §14): started lazily when the
+        # first TieredStore-backed region registers.  Single thread — the
+        # sole writer of the tier_* service counters and the only caller
+        # of store.promote()/demote() besides inline read-through fills.
+        self._tier_cv = threading.Condition()
+        self._tier_thread: Optional[threading.Thread] = None
+        self._tier_stop = False
 
         # Kernel-mmap fidelity: Linux serializes fault handling per address
         # space on mmap_sem — the scalability bottleneck the paper's related
@@ -323,6 +357,12 @@ class PagingService:
                     interval=self.config.pattern_interval,
                     hysteresis=self.config.pattern_hysteresis,
                 )
+            if region.tiered and not self.config.mmap_compat \
+                    and self._tier_thread is None:
+                t = threading.Thread(target=self._tier_loop,
+                                     name="umap-tier-migrator", daemon=True)
+                self._tier_thread = t
+                t.start()
             return rid
 
     def unregister(self, region: "UMapRegion") -> None:
@@ -331,16 +371,29 @@ class PagingService:
         # can re-install a page after the region is dropped (the seed had a
         # window where exactly that ghost install leaked a slot forever).
         region._closing = True
-        self.flush_region(region, evict=True)
-        with self.lock:
-            self._regions.pop(region.region_id, None)
-            self._classifiers.pop(region.region_id, None)
+        try:
+            self.flush_region(region, evict=True)
+        finally:
+            # Unregister even when the flush raises on quarantined pages
+            # (§14.4): the error must reach the caller, but leaving the
+            # region registered would leak it — and its owned service's
+            # worker threads — forever.  Quarantined entries deliberately
+            # keep their slots (stranded, visible in quarantined_pages).
+            with self.lock:
+                self._regions.pop(region.region_id, None)
+                self._classifiers.pop(region.region_id, None)
 
     def close(self) -> None:
         if self._closed:
             return
+        quarantine_err: Optional[BaseException] = None
         for region in list(self._regions.values()):
-            self.flush_region(region, evict=False)
+            try:
+                self.flush_region(region, evict=False)
+            except IOError as e:
+                # Best-effort shutdown: quarantined pages cannot be
+                # persisted, but the worker pools must still come down.
+                quarantine_err = e
         self._closed = True
         self.watermark.stop()
         self._fill_shutdown = True
@@ -349,8 +402,15 @@ class PagingService:
                 cv.notify_all()
         for _ in self._evictors:
             self._clean_q.put(_SHUTDOWN)
+        if self._tier_thread is not None:
+            self._tier_stop = True
+            with self._tier_cv:
+                self._tier_cv.notify_all()
+            self._tier_thread.join(timeout=5.0)
         for t in self._fillers + self._evictors:
             t.join(timeout=5.0)
+        if quarantine_err is not None:
+            raise quarantine_err
 
     # --------------------------------------------------------- fault path
 
@@ -396,11 +456,24 @@ class PagingService:
                         e = shard.table.insert_filling(key)
                         if demand:
                             shard.counters["demand_faults"] += 1
+                            if region.tiered and self._tier_thread is not None:
+                                self._heat_locked(shard, region, pno)
                         else:
                             e.prefetched = True
                         out.append(e)
         out.sort(key=lambda e: e.key[1])
         return out
+
+    def _heat_locked(self, shard: _Shard, region: "UMapRegion",
+                     pno: int) -> None:
+        """Bump the access heat of the store extent behind ``pno`` (shard
+        lock held).  Demand faults only — a fault is a store read the fast
+        tier could have absorbed, which is exactly the signal the migration
+        engine ranks on (DESIGN.md §14.1); buffer hits cost no store I/O
+        and would only promote extents the page buffer already serves."""
+        key = (region.region_id,
+               (pno * region.page_size) // region.store.extent_size)
+        shard.heat[key] = shard.heat.get(key, 0.0) + 1.0
 
     def _dispatch_fills(self, region: "UMapRegion",
                         entries: List[PageEntry]) -> None:
@@ -422,7 +495,10 @@ class PagingService:
         ``lease=True`` the pin is accounted as a zero-copy lease
         (``entry.leases`` + the ``leases`` counter, DESIGN.md §13).  Raises
         ``RuntimeError`` once the region has started closing — the guard
-        that closes the flush/unregister re-install race.
+        that closes the flush/unregister re-install race — and ``IOError``
+        when the fill died on a backing-store exception (the error-
+        propagation contract, DESIGN.md §14.4: every waiter raises, none
+        re-faults forever).
         """
         key = (region.region_id, page_no)
         shard = self._shard_of(key)
@@ -438,6 +514,8 @@ class PagingService:
                 if e is None:
                     e = shard.table.insert_filling(key)
                     shard.counters["demand_faults"] += 1
+                    if region.tiered and self._tier_thread is not None:
+                        self._heat_locked(shard, region, page_no)
                     dispatch = e
                     waitee = e
                 elif e.state is PageState.PRESENT:
@@ -462,6 +540,11 @@ class PagingService:
             if deadline is not None and time.monotonic() >= deadline:
                 return None        # dispatched fill proceeds; wait abandoned
             waitee.event.wait(timeout=0.05)
+            if waitee.error is not None:
+                raise IOError(
+                    f"fill of page {page_no} in region "
+                    f"{region.name or region.region_id} failed: "
+                    f"{waitee.error}") from waitee.error
             first_attempt = False
 
     # Ceiling for the locked-copy fast path: a 64 KiB memcpy (~microseconds)
@@ -710,6 +793,145 @@ class PagingService:
         clf = self._classifiers.get(region_id)
         return None if clf is None else clf.snapshot()
 
+    # ----------------------------- tier migration engine (DESIGN.md §14)
+
+    def apply_tier_hint(self, region: "UMapRegion", hint,
+                        extents: List[int]) -> None:
+        """Apply an application tier hint (``region.advise(tier_hint=...)``).
+
+        Hints override heat, per the paper's application-knowledge-first
+        design: ``hot`` seeds the extents with promote-threshold heat,
+        ``pin_fast`` additionally pins them against demotion, ``cold``
+        zeroes their heat and queues demotion.  All migration I/O stays on
+        the migration thread (poked here for promptness) — hints never
+        charge the application thread a tier copy.
+        """
+        from .hints import TierHint
+        hint = TierHint(hint)
+        store = region.store
+        rid = region.region_id
+        if hint is TierHint.COLD:
+            for shard in self.shards:
+                with self._locked(shard):
+                    for ext in extents:
+                        shard.heat.pop((rid, ext), None)
+            store.mark_cold(extents)
+        else:
+            if hint is TierHint.PIN_FAST:
+                store.pin_fast(extents)
+            # Seed heat in the extent's lead-page shard (aggregation sums
+            # across shards, so one stripe carrying the boost suffices).
+            boost = 2.0 * self.config.tier_promote_heat
+            ps = region.page_size
+            for ext in extents:
+                key = (rid, ext)
+                pno = (ext * store.extent_size) // ps
+                shard = self._shard_of((rid, pno))
+                with self._locked(shard):
+                    shard.heat[key] = shard.heat.get(key, 0.0) + boost
+        with self._tier_cv:
+            self._tier_cv.notify_all()
+
+    def _tier_loop(self) -> None:
+        while True:
+            with self._tier_cv:
+                self._tier_cv.wait(timeout=self.config.tier_interval_s)
+            if self._tier_stop:
+                return
+            try:
+                self._tier_cycle()
+            except Exception:       # store I/O died mid-migration: the
+                self._svc["tier_errors"] += 1    # next cycle retries
+
+
+    def _decay_heat(self) -> Dict[tuple, float]:
+        """Decay every shard's heat counters and return the aggregate.
+
+        Exponential decay (``heat *= tier_decay`` per cycle) keeps the
+        ranking recency-weighted — an extent hot during warmup but idle
+        since cools below the promote threshold within a few cycles.
+        Sub-0.05 residue is dropped so idle tiered services converge to
+        empty heat maps (zero steady-state cost).
+        """
+        decay = self.config.tier_decay
+        agg: Dict[tuple, float] = {}
+        for shard in self.shards:
+            with self._locked(shard):
+                dead = []
+                for k, v in shard.heat.items():
+                    v *= decay
+                    if v < 0.05:
+                        dead.append(k)
+                    else:
+                        shard.heat[k] = v
+                        agg[k] = agg.get(k, 0.0) + v
+                for k in dead:
+                    del shard.heat[k]
+        return agg
+
+    def _tier_cycle(self) -> None:
+        """One migration pass: promote hot extents, demote cold ones.
+
+        Transactional safety lives in the store (copy → verify gen → flip,
+        §14.2): a promote/demote that races a write or an in-flight read
+        returns False and is simply retried on a later cycle, so this loop
+        never blocks a fault and never publishes a torn extent.
+        """
+        heats = self._decay_heat()
+        with self.lock:
+            regions = [r for r in self._regions.values()
+                       if r.tiered and not r._closing]
+        threshold = self.config.tier_promote_heat
+        budget = self.config.tier_max_migrations
+        promoted = demoted = 0
+        for region in regions:
+            store = region.store
+            rid = region.region_id
+            cold_hints = store.take_cold_hints()      # explicit cold advice
+            for ext in cold_hints:
+                if store.demote(ext):
+                    demoted += 1
+            if cold_hints:
+                # A demote refused by a transient pin/gen race must not
+                # lose the hint: re-queue whatever is STILL resident for
+                # the next cycle (non-resident extents are done either way).
+                still = set(store.resident_extents())
+                missed = [e for e in cold_hints if e in still]
+                if missed:
+                    store.mark_cold(missed)
+            resident = set(store.resident_extents())
+            pinned = set(store.pinned_fast_extents())
+            heat_of = {ext: v for (r, ext), v in heats.items() if r == rid}
+            # pin_fast extents promote at top priority regardless of heat.
+            hot = sorted((e for e in pinned if e not in resident),
+                         key=lambda e: -heat_of.get(e, 0.0))
+            hot += sorted(
+                (e for e, v in heat_of.items()
+                 if v >= threshold and e not in resident and e not in pinned),
+                key=lambda e: -heat_of[e])
+            cold = sorted((e for e in resident if e not in pinned),
+                          key=lambda e: heat_of.get(e, 0.0))
+            for ext in hot:
+                if promoted >= budget:
+                    break
+                if store.free_fast_slots() == 0:
+                    # Demote the coldest resident extent — but only with
+                    # hysteresis (half the candidate's heat), so two
+                    # equally-warm extents cannot ping-pong a slot.
+                    victim = None
+                    for c in cold:
+                        if heat_of.get(c, 0.0) < 0.5 * heat_of.get(ext, threshold):
+                            victim = c
+                            break
+                    if victim is None or not store.demote(victim):
+                        continue
+                    cold.remove(victim)
+                    demoted += 1
+                if store.promote(ext):
+                    promoted += 1
+        self._svc["tier_promotions"] += promoted
+        self._svc["tier_demotions"] += demoted
+
     # ------------------------------------------------------ prefetch (§3.6)
 
     def prefetch(self, region: "UMapRegion", page_nos: List[int]) -> int:
@@ -912,21 +1134,71 @@ class PagingService:
                         self._do_fill(region, entries[0], worker_id)
                     else:
                         self._do_fill_batch(region, entries, worker_id)
-                except Exception:  # pragma: no cover - keep the pool alive
-                    import traceback
-                    traceback.print_exc()
-                    self._abandon_fills(entries)
+                except Exception as exc:  # keep the pool alive; the seed's
+                    # print_exc + abandon here was the infinite-re-fault bug
+                    # (DESIGN.md §14.4): store exceptions are now handled
+                    # inside _do_fill/_do_fill_batch with slot cleanup, so
+                    # only unexpected engine errors reach this — propagate
+                    # them to the fault site too rather than re-faulting.
+                    self._fail_fills(entries, exc)
 
     def _abandon_fills(self, entries: List[PageEntry]) -> None:
-        """Drop FILLING entries (closing region / filler error): waiters wake
-        and either re-fault or observe the closing gate."""
+        """Drop FILLING entries (closing region): waiters wake and observe
+        the closing gate.
+
+        Grouped per shard — ONE lock acquisition and ONE broadcast per
+        touched stripe, matching the ``_insert_absent`` discipline — so a
+        batch spanning several stripes wakes every stripe's waiters (the
+        §14.4 audit: the per-entry loop this replaces did notify each
+        entry's own stripe, but re-acquired the same lock once per entry;
+        the regression test pins the all-stripes wakeup either way).
+        """
+        by_shard: Dict[int, List[PageEntry]] = {}
         for e in entries:
+            by_shard.setdefault(self._shard_index(e.key), []).append(e)
+        for si, es in by_shard.items():
+            shard = self.shards[si]
+            with self._locked(shard):
+                for e in es:
+                    if (shard.table.get(e.key) is e
+                            and e.state is PageState.FILLING):
+                        shard.table.remove(e)
+                    else:
+                        e.event.set()
+                shard.cond.notify_all()
+
+    def _fail_fills(self, entries: List[PageEntry], exc: BaseException) -> None:
+        """Fail FILLING entries on a store exception (DESIGN.md §14.4).
+
+        The error is stashed on each entry *before* its event is set, so
+        every thread blocked in :meth:`acquire_one` observes it on wake and
+        raises ``IOError`` — no waiter is left to re-fault forever.  The
+        entries leave the table, so a *later* fault is a fresh attempt
+        against the store (the application's retry path).
+        """
+        by_shard: Dict[int, List[PageEntry]] = {}
+        for e in entries:
+            by_shard.setdefault(self._shard_index(e.key), []).append(e)
+        for si, es in by_shard.items():
+            shard = self.shards[si]
+            with self._locked(shard):
+                for e in es:
+                    e.error = exc
+                    shard.counters["io_errors"] += 1
+                    if (shard.table.get(e.key) is e
+                            and e.state is PageState.FILLING):
+                        shard.table.remove(e)    # sets the event
+                    else:
+                        e.event.set()
+                shard.cond.notify_all()
+
+    def _release_fill_slots(self, pairs) -> None:
+        """Return never-installed slots of a failed fill to their shards."""
+        for e, slot in pairs:
             shard = self._shard_of(e.key)
             with self._locked(shard):
-                if shard.table.get(e.key) is e and e.state is PageState.FILLING:
-                    shard.table.remove(e)
-                else:
-                    e.event.set()
+                self.buffer.release(slot)
+                shard.free.append(slot)
                 shard.cond.notify_all()
 
     # ------------------------------------------ fill resolution (read path)
@@ -957,8 +1229,16 @@ class PagingService:
             self.buffer.slot_view(slot, region.page_nbytes(e.key[1]))
             for e, slot in zip(entries, slots)
         ]
-        # ONE store call for the whole run — I/O outside all locks.
-        region.store.read_into_batch(entries[0].key[1] * region.page_size, bufs)
+        # ONE store call for the whole run — I/O outside all locks.  A store
+        # exception fails the whole run: slots go back to their shards and
+        # every fault waiter raises IOError (DESIGN.md §14.4).
+        try:
+            region.store.read_into_batch(
+                entries[0].key[1] * region.page_size, bufs)
+        except Exception as exc:
+            self._release_fill_slots(zip(entries, slots))
+            self._fail_fills(entries, exc)
+            return
 
         seed_si = self._shard_index(entries[0].key)
         groups: Dict[int, List] = {}
@@ -995,11 +1275,18 @@ class PagingService:
         slot = self._alloc_slot_blocking(entry.key)
         nbytes = region.page_nbytes(entry.key[1])
         buf = self.buffer.slot_view(slot, self.buffer.slot_size)
-        # I/O outside all locks.
-        if region.fill_callback is not None:
-            region.fill_callback(entry.key[1], buf[:nbytes])
-        else:
-            region.store.read_into(entry.key[1] * region.page_size, buf[:nbytes])
+        # I/O outside all locks.  On a store/callback exception the slot is
+        # returned and the error propagates to every waiter (§14.4).
+        try:
+            if region.fill_callback is not None:
+                region.fill_callback(entry.key[1], buf[:nbytes])
+            else:
+                region.store.read_into(
+                    entry.key[1] * region.page_size, buf[:nbytes])
+        except Exception as exc:
+            self._release_fill_slots([(entry, slot)])
+            self._fail_fills([entry], exc)
+            return
         shard = self._shard_of(entry.key)
         with self._locked(shard):
             shard.table.install(entry, slot)
@@ -1039,7 +1326,9 @@ class PagingService:
             if e.leases > 0:
                 shard.counters["lease_blocked_evictions"] += 1
             return False
-        return True
+        # A quarantined page's only copy of its dirty bytes is the buffer
+        # slot — evicting it would be silent data loss (§14.4).
+        return not e.quarantined
 
     def _drop_clean(self, shard: _Shard, entry: PageEntry) -> None:
         """Evict a clean victim — pure metadata, no I/O (shard lock held)."""
@@ -1055,7 +1344,8 @@ class PagingService:
         posted = 0
         for key in shard.table.resident_keys():
             e = shard.table.get(key)
-            if e is None or not e.dirty or e.state is not PageState.PRESENT:
+            if (e is None or not e.dirty or e.state is not PageState.PRESENT
+                    or e.quarantined):
                 continue
             if e.pins > 0:
                 if e.leases > 0:      # dirty but lease-pinned: repost later
@@ -1100,7 +1390,7 @@ class PagingService:
                         1, lambda k: self._any_victim_ok(shard, k))
                     if top:
                         e0 = shard.table.get(top[0])
-                        if e0 is not None and e0.dirty \
+                        if e0 is not None and e0.dirty and not e0.quarantined \
                                 and e0.state is PageState.PRESENT:
                             e0.state = PageState.CLEANING
                             e0.event.clear()
@@ -1224,9 +1514,13 @@ class PagingService:
                 # Every queued payload is ("clean", entry) — eviction goes
                 # through _evict_now_batch directly, never this queue.
                 self._do_clean_batch([e for _, e in items])
-            except Exception:  # pragma: no cover
-                import traceback
-                traceback.print_exc()
+            except Exception as exc:  # pragma: no cover - engine bug; store
+                # errors are handled inside _do_clean_batch.  The seed's
+                # print_exc here stranded CLEANING pages forever (§14.4);
+                # route survivors through the bounded retry/quarantine path.
+                self._fail_writeback(
+                    [e for _, e in items
+                     if e.state is PageState.CLEANING], exc, evicting=False)
             if swallowed_shutdown:
                 self._clean_q.put(_SHUTDOWN)
 
@@ -1274,7 +1568,11 @@ class PagingService:
                     continue
                 valid.append((region, e))
         for region, run in self._writeback_runs(valid):
-            self._write_run(region, run)          # I/O outside all locks
+            try:
+                self._write_run(region, run)      # I/O outside all locks
+            except Exception as exc:
+                self._fail_writeback(run, exc, evicting=False)
+                continue
             groups: Dict[int, List[PageEntry]] = {}
             for e in run:
                 groups.setdefault(self._shard_index(e.key), []).append(e)
@@ -1286,6 +1584,10 @@ class PagingService:
                         if e.state is PageState.CLEANING:
                             e.state = PageState.PRESENT
                         shard.table.mark_clean(e)
+                        # A successful write-back forgives earlier transient
+                        # failures: the retry bound is per write-back
+                        # episode, not per page lifetime.
+                        e.wb_retries = 0
                         shard.counters["writebacks"] += 1
                         e.event.set()
                     if si == seed_si and len(run) > 1:
@@ -1293,18 +1595,66 @@ class PagingService:
                         shard.counters["writeback_pages"] += len(run)
                     shard.cond.notify_all()
 
+    def _fail_writeback(self, run: List[PageEntry], exc: BaseException,
+                        evicting: bool) -> None:
+        """Handle a failed write-back run (DESIGN.md §14.4).
+
+        Pages re-mark DIRTY (they never stopped being dirty — ``mark_clean``
+        runs only after a successful write) and are re-posted to the
+        cleaner queue for a bounded number of retries
+        (``config.writeback_retries``); past the bound they are
+        **quarantined**: resident + dirty, excluded from cleaning and
+        eviction so their un-persisted bytes are never dropped, counted in
+        ``quarantined_pages``, and ``flush_region`` raises on them.  Evict-
+        path victims additionally re-enter their shard's eviction policy
+        (their ``on_remove`` ran at selection).
+        """
+        limit = self.config.writeback_retries
+        repost: List[PageEntry] = []
+        for e in run:
+            shard = self._shard_of(e.key)
+            with self._locked(shard):
+                shard.counters["writeback_errors"] += 1
+                e.wb_retries += 1
+                in_table = shard.table.get(e.key) is e
+                if evicting and in_table:
+                    shard.policy.on_install(e.key)   # re-track the victim
+                if e.wb_retries < limit and in_table:
+                    # Retry through the cleaner queue: back to CLEANING
+                    # (bytes stay stable; no path pins CLEANING pages).
+                    e.state = PageState.CLEANING
+                    e.event.clear()
+                    repost.append(e)
+                else:
+                    e.state = PageState.PRESENT
+                    if in_table and not e.quarantined:
+                        e.quarantined = True
+                        shard.counters["quarantined_pages"] += 1
+                    e.event.set()
+                shard.cond.notify_all()
+        for e in repost:
+            self._clean_q.put(("clean", e))
+
     def _evict_now_batch(self, victims: List[PageEntry]) -> None:
         """Write back dirty victims (batched per adjacent run) and free all
         their slots.  No locks held on entry; victims are EVICTING, which no
-        path can pin or re-dirty, so bytes are stable across the write."""
+        path can pin or re-dirty, so bytes are stable across the write.
+        A run whose write fails keeps its pages RESIDENT (dirty data must
+        not be dropped) — see :meth:`_fail_writeback`."""
         writable = []
         for v in victims:
             region = self._regions.get(v.key[0])
             if v.dirty and region is not None:
                 writable.append((region, v))
         wrote = set()
+        failed = set()
         for region, run in self._writeback_runs(writable):
-            self._write_run(region, run)
+            try:
+                self._write_run(region, run)
+            except Exception as exc:
+                self._fail_writeback(run, exc, evicting=True)
+                failed.update(e.key for e in run)
+                continue
             seed_si = self._shard_index(run[0].key)
             if len(run) > 1:
                 shard = self.shards[seed_si]
@@ -1313,6 +1663,8 @@ class PagingService:
                     shard.counters["writeback_pages"] += len(run)
             wrote.update(e.key for e in run)
         for v in victims:
+            if v.key in failed:
+                continue               # reverted by _fail_writeback
             shard = self._shard_of(v.key)
             with self._locked(shard):
                 if v.key in wrote:
@@ -1345,6 +1697,11 @@ class PagingService:
         no page of the region is dirty/resident (evict) and none is in
         flight — combined with the region's closing gate this guarantees no
         fill can re-install a page after an unregister flush returns.
+
+        Quarantined pages (write-back retries exhausted, §14.4) cannot be
+        persisted: they are skipped by the drain and reported by raising
+        ``IOError`` once everything else has flushed — silently returning
+        would let callers believe un-persisted bytes are durable.
         """
         while True:
             batch: List[PageEntry] = []
@@ -1352,6 +1709,8 @@ class PagingService:
             for shard in self.shards:
                 with self._locked(shard):
                     for e in shard.table.region_entries(region.region_id):
+                        if e.quarantined:
+                            continue         # reported after the drain
                         if (e.state is PageState.PRESENT
                                 and (e.dirty or evict) and e.pins == 0):
                             e.state = (PageState.EVICTING if evict
@@ -1374,7 +1733,17 @@ class PagingService:
                 self._evict_now_batch(batch)
             else:
                 self._do_clean_batch(batch)
+        quarantined = [
+            e.key[1] for shard in self.shards
+            for e in shard.table.region_entries(region.region_id)
+            if e.quarantined
+        ]
         region.store.flush()
+        if quarantined:
+            raise IOError(
+                f"flush of region {region.name or region.region_id} left "
+                f"{len(quarantined)} quarantined dirty page(s) "
+                f"(write-back retries exhausted): {sorted(quarantined)[:8]}")
 
     # ------------------------------------------------------------- queries
 

@@ -36,7 +36,8 @@ class PageState(enum.Enum):
 class PageEntry:
     __slots__ = (
         "key", "state", "slot", "dirty", "pins", "leases", "event",
-        "prefetched", "touched_after_prefetch",
+        "prefetched", "touched_after_prefetch", "error", "wb_retries",
+        "quarantined",
     )
 
     def __init__(self, key: PageKey, state: PageState, slot: int = -1):
@@ -45,6 +46,16 @@ class PageEntry:
         self.slot = slot
         self.dirty = False
         self.pins = 0
+        # Error-propagation contract (DESIGN.md §14.4): a fill that died on
+        # a store exception stashes it here *before* setting the event, so
+        # every thread blocked at the fault site raises IOError instead of
+        # re-faulting forever.
+        self.error: Optional[BaseException] = None
+        # Write-back failure accounting: bounded retries, then quarantine
+        # (the page stays resident + dirty and is excluded from cleaning/
+        # eviction so its un-persisted bytes are never dropped).
+        self.wb_retries = 0
+        self.quarantined = False
         # How many of `pins` are zero-copy leases (core/lease.py).  A leased
         # page is pinned like any other, but the distinction feeds the
         # `lease_blocked_evictions` telemetry: capacity/clean pressure that

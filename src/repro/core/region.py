@@ -22,10 +22,10 @@ import numpy as np
 from .config import UMapConfig
 from .lease import LeaseRun, PageLease
 from .pager import PagingService
-from .store import BackingStore
+from .store import BackingStore, TieredStore
 
 if TYPE_CHECKING:  # pragma: no cover
-    from .hints import AccessAdvice
+    from .hints import AccessAdvice, TierHint
 
 
 class UMapRegion:
@@ -58,6 +58,10 @@ class UMapRegion:
         self.hint_pinned = readahead_pages is not None
         self.advice: Optional["AccessAdvice"] = None
         self.detected_stride = 1   # classifier-detected fault stride
+        # Tiered-store regions feed the pager's heat counters and the
+        # migration engine (DESIGN.md §14); must be set before register(),
+        # which starts the migration thread on the first tiered region.
+        self.tiered = isinstance(store, TieredStore)
         # Closing gate (DESIGN.md §12): set by unregister() *before* the
         # evicting flush.  New faults raise, queued fills are abandoned, so
         # no fill can re-install a page after the region is dropped.
@@ -180,22 +184,53 @@ class UMapRegion:
 
     # ------------------------------------------------------------- hints
 
-    def advise(self, advice: "AccessAdvice") -> None:
+    def advise(self, advice: Optional["AccessAdvice"] = None,
+               tier_hint: "TierHint | str | None" = None,
+               offset: int = 0, nbytes: Optional[int] = None) -> None:
         """Declare this region's access pattern (madvise analogue, §3.6).
 
-        Applies the advice's readahead immediately, swaps the service's
-        eviction policy (service-wide — regions sharing a service share a
-        buffer and hence a policy, §3.3), and *pins* the region: the online
-        classifier will never override an explicit hint (DESIGN.md §8).
+        With ``advice`` set, applies the advice's readahead immediately,
+        swaps the service's eviction policy (service-wide — regions sharing
+        a service share a buffer and hence a policy, §3.3), and *pins* the
+        region: the online classifier will never override an explicit hint
+        (DESIGN.md §8).
+
+        With ``tier_hint`` set (``"hot"`` / ``"cold"`` / ``"pin_fast"``, a
+        tiered-store region only), overrides the migration engine's heat
+        for the byte range ``[offset, offset + nbytes)`` (default: the
+        whole region) — the paper's application-hints design extended to
+        tier placement (DESIGN.md §14.3).  The two hint kinds compose and
+        may be passed together.
         """
-        from .hints import ADVICE_SETTINGS  # local import: hints imports config
-        settings = ADVICE_SETTINGS[advice]
-        with self.service.lock:   # exclude an in-flight classifier decision
-            self.advice = advice
-            self.hint_pinned = True
-            self.readahead_pages = settings["read_ahead"]
-            self.detected_stride = 1
-        self.service.set_eviction_policy(settings["eviction_policy"])
+        if advice is None and tier_hint is None:
+            raise ValueError("advise() needs an access advice, a tier "
+                             "hint, or both")
+        if advice is not None:
+            from .hints import ADVICE_SETTINGS  # local: hints imports config
+            settings = ADVICE_SETTINGS[advice]
+            with self.service.lock:   # exclude in-flight classifier decision
+                self.advice = advice
+                self.hint_pinned = True
+                self.readahead_pages = settings["read_ahead"]
+                self.detected_stride = 1
+            self.service.set_eviction_policy(settings["eviction_policy"])
+        if tier_hint is not None:
+            self.advise_tier(tier_hint, offset=offset, nbytes=nbytes)
+
+    def advise_tier(self, hint: "TierHint | str", offset: int = 0,
+                    nbytes: Optional[int] = None) -> None:
+        """Tier-placement hint for a byte range (DESIGN.md §14.3)."""
+        if not self.tiered:
+            raise ValueError(
+                "tier hints require a TieredStore-backed region")
+        nbytes = self.size - offset if nbytes is None else nbytes
+        if nbytes <= 0 or offset < 0 or offset + nbytes > self.size:
+            raise IndexError(
+                f"tier-hint range [{offset}, {offset + nbytes}) outside "
+                f"region of {self.size} bytes")
+        es = self.store.extent_size
+        extents = list(range(offset // es, (offset + nbytes - 1) // es + 1))
+        self.service.apply_tier_hint(self, hint, extents)
 
     def prefetch(self, offset: int, nbytes: int) -> int:
         return self.prefetch_pages(self._page_range(offset, nbytes))
@@ -237,8 +272,11 @@ class UMapRegion:
 
     def close(self) -> None:
         if not self._closed:
-            self.service.unregister(self)
+            # Mark closed BEFORE the unregister flush: a quarantine IOError
+            # (DESIGN.md §14.4) propagates to the caller, but the region is
+            # unregistered either way and a second close must not re-flush.
             self._closed = True
+            self.service.unregister(self)
 
 
 class UMapArrayView:
@@ -311,8 +349,15 @@ def umap(
 
 
 def uunmap(region: UMapRegion) -> None:
-    """Flush, drop, and unregister a region (paper §4.1 ``uunmap()``)."""
+    """Flush, drop, and unregister a region (paper §4.1 ``uunmap()``).
+
+    A quarantine ``IOError`` (un-persistable dirty pages, DESIGN.md §14.4)
+    propagates to the caller, but an owned service still shuts down — its
+    worker threads must not outlive the region.
+    """
     service = region.service
-    region.close()
-    if getattr(region, "_owns_service", False):
-        service.close()
+    try:
+        region.close()
+    finally:
+        if getattr(region, "_owns_service", False):
+            service.close()

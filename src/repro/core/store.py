@@ -21,6 +21,16 @@ Provided stores:
                    testbed).
   SyntheticStore   procedurally generated contents (no disk footprint) for
                    very large logical spaces.
+  TieredStore      composes a FAST store as an extent-granular cache over a
+                   SLOW store (pmem-over-NVMe, NVMe-over-Lustre ...) with a
+                   fixed fast-tier byte budget, read-through / write-back
+                   semantics, and a transactional promote/demote protocol
+                   driven by the pager's heat-based migration engine
+                   (DESIGN.md §14).
+  FaultyStore      fault-injection wrapper: fails reads/writes after a
+                   configurable number of operations — the regression
+                   harness for the end-to-end I/O error propagation
+                   contract (DESIGN.md §14.4).
 """
 
 from __future__ import annotations
@@ -29,7 +39,7 @@ import abc
 import os
 import threading
 import time
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -540,3 +550,506 @@ class SyntheticStore(BackingStore):
                 pos += mv.nbytes
         self._count_write(total)
         return total
+
+
+class TieredStore(BackingStore):
+    """A fast store composed as an extent-granular cache over a slow store.
+
+    The paper's premise is a *diversity* of storage tiers behind one mapping
+    interface; ``TieredStore`` makes two of this module's stores compose:
+    the logical byte space is the SLOW tier's space, carved into fixed-size
+    **extents**; a bounded budget of ``fast_bytes`` on the FAST tier holds
+    the extents currently *resident* there (a residency map: extent ->
+    fast-tier slot).  Semantics (DESIGN.md §14):
+
+      * **read-through** — reads of resident extents hit the fast tier;
+        misses read the slow tier (and, with ``promote_on_read`` and a free
+        fast slot, promote the extent inline — never evicting: eviction-
+        based placement belongs to the pager's heat-driven migration
+        engine, which calls :meth:`promote` / :meth:`demote`).
+      * **write-back** — writes to resident extents land only in the fast
+        tier and mark the extent dirty; :meth:`flush` (and demotion) write
+        dirty extents back to the slow tier.  Writes to non-resident
+        extents go straight to the slow tier (write-around), optionally
+        promoting afterwards (``promote_on_write`` — the checkpoint-cache
+        opt-in).
+      * **transactional migration** — promote/demote follow copy → verify
+        generation → flip residency → free.  Every write bumps the touched
+        extents' generation counters; a migration whose staging copy raced
+        a write observes the bump at commit time and aborts, so a
+        concurrent fault can never observe a torn extent.  In-flight reads
+        additionally pin their extents, which blocks demotion (the only
+        transition that invalidates bytes a reader may be using).
+
+    Batched ops are split per tier while *preserving* single-op coalescing
+    (PR 1/3): consecutive segments routed to the same tier at contiguous
+    device offsets collapse into one ``read_into_batch`` /
+    ``write_from_batch`` member call — a run of non-resident extents still
+    costs ONE slow-tier op.
+    """
+
+    def __init__(self, fast: BackingStore, slow: BackingStore,
+                 fast_bytes: Optional[int] = None,
+                 extent_size: int = 1 << 20,
+                 promote_on_read: bool = True,
+                 promote_on_write: bool = False):
+        if extent_size < 1:
+            raise ValueError(f"extent_size must be >= 1, got {extent_size}")
+        budget = fast.size if fast_bytes is None else min(fast_bytes, fast.size)
+        if budget < extent_size:
+            raise ValueError(
+                f"fast-tier budget {budget} cannot hold one extent "
+                f"({extent_size} bytes)")
+        self.fast = fast
+        self.slow = slow
+        self.extent_size = extent_size
+        self.num_fast_slots = budget // extent_size
+        self.num_extents = -(-slow.size // extent_size)
+        self.promote_on_read = promote_on_read
+        self.promote_on_write = promote_on_write
+        # Deep batches still pay off: per-tier splitting preserves them.
+        self.batch_read_hint = max(fast.batch_read_hint, slow.batch_read_hint)
+        self.batch_write_hint = max(fast.batch_write_hint,
+                                    slow.batch_write_hint)
+        self._lock = threading.Lock()
+        self._slot: dict[int, int] = {}        # extent -> fast slot
+        self._free: List[int] = list(range(self.num_fast_slots - 1, -1, -1))
+        self._dirty: set[int] = set()          # resident extents newer in fast
+        self._gen: dict[int, int] = {}         # write generation per extent
+        self._pins: dict[int, int] = {}        # in-flight ops per extent
+        # In-flight WRITES separately: a writer bumps the generation BEFORE
+        # its I/O lands, so promote's gen check alone cannot see a write
+        # still in flight — its commit must also refuse write-pinned
+        # extents or it would publish the pre-write slow-tier bytes.
+        self._wpins: dict[int, int] = {}
+        self._pinned_fast: set[int] = set()    # tier_hint="pin_fast" extents
+        self._cold: set[int] = set()           # tier_hint="cold" demote queue
+        self.promotions = 0
+        self.demotions = 0
+        self.migration_aborts = 0
+        self.fast_bytes_read = 0
+        self.slow_bytes_read = 0
+        self.reset_stats()
+
+    @classmethod
+    def from_config(cls, slow: BackingStore, config,
+                    fast: Optional[BackingStore] = None) -> "TieredStore":
+        """Build a tiered store from a :class:`UMapConfig`'s tier budget
+        (``UMAP_TIER_FAST_BYTES`` / ``UMAP_TIER_EXTENT``); ``fast``
+        defaults to a host-memory tier of exactly the budget.
+
+        Inline read-through promotion is OFF here: a config-built store is
+        the pager pairing, where placement belongs to the heat-driven
+        migration engine — an inline promote would re-read the whole
+        extent on the filler thread for every warm-up miss (extent-size /
+        page-size read amplification on the demand path).
+        """
+        budget = config.tier_fast_bytes
+        if budget < 1:
+            raise ValueError(
+                "tier_fast_bytes (UMAP_TIER_FAST_BYTES) must be set to "
+                "build a TieredStore from config")
+        if fast is None:
+            fast = HostArrayStore(np.zeros(budget, np.uint8))
+        return cls(fast, slow, fast_bytes=budget,
+                   extent_size=min(config.tier_extent_size, budget),
+                   promote_on_read=False)
+
+    @property
+    def size(self) -> int:
+        return self.slow.size
+
+    # ------------------------------------------------------------ geometry
+
+    def extent_of(self, offset: int) -> int:
+        return offset // self.extent_size
+
+    def _extent_nbytes(self, ext: int) -> int:
+        return min(self.extent_size, self.slow.size - ext * self.extent_size)
+
+    # ------------------------------------------------------------- telemetry
+
+    def resident_extents(self) -> List[int]:
+        with self._lock:
+            return sorted(self._slot)
+
+    def tier_stats(self) -> dict:
+        with self._lock:
+            return {
+                "resident_extents": len(self._slot),
+                "free_fast_slots": len(self._free),
+                "dirty_extents": len(self._dirty),
+                "pinned_fast": len(self._pinned_fast),
+                "promotions": self.promotions,
+                "demotions": self.demotions,
+                "migration_aborts": self.migration_aborts,
+                "fast_bytes_read": self.fast_bytes_read,
+                "slow_bytes_read": self.slow_bytes_read,
+            }
+
+    # ------------------------------------------------------- segment routing
+
+    def _plan_locked(self, offset: int, length: int, write: bool):
+        """Route ``[offset, offset+length)`` to per-tier segments and pin
+        the touched extents (``self._lock`` held).
+
+        Returns ``(segments, extents)`` where each segment is ``(store,
+        dev_off, buf_off, n)``.  Pins block demotion — the one migration
+        step that would invalidate fast-tier bytes under an in-flight op.
+        """
+        segs: List[Tuple[BackingStore, int, int, int]] = []
+        exts: List[int] = []
+        pos = offset
+        end = offset + length
+        while pos < end:
+            ext = pos // self.extent_size
+            hi = min(end, (ext + 1) * self.extent_size)
+            n = hi - pos
+            self._pins[ext] = self._pins.get(ext, 0) + 1
+            if write:
+                self._wpins[ext] = self._wpins.get(ext, 0) + 1
+            exts.append(ext)
+            slot = self._slot.get(ext)
+            if slot is not None:
+                dev = slot * self.extent_size + (pos - ext * self.extent_size)
+                segs.append((self.fast, dev, pos - offset, n))
+                if write:
+                    self._dirty.add(ext)
+                else:
+                    self.fast_bytes_read += n
+            else:
+                segs.append((self.slow, pos, pos - offset, n))
+                if not write:
+                    self.slow_bytes_read += n
+            if write:
+                self._gen[ext] = self._gen.get(ext, 0) + 1
+            pos = hi
+        return segs, exts
+
+    def _unpin(self, exts: Iterable[int], write: bool = False) -> None:
+        with self._lock:
+            for ext in exts:
+                left = self._pins.get(ext, 0) - 1
+                if left > 0:
+                    self._pins[ext] = left
+                else:
+                    self._pins.pop(ext, None)
+                if write:
+                    wleft = self._wpins.get(ext, 0) - 1
+                    if wleft > 0:
+                        self._wpins[ext] = wleft
+                    else:
+                        self._wpins.pop(ext, None)
+
+    @staticmethod
+    def _runs(segs):
+        """Collapse consecutive same-store, device-contiguous segments into
+        runs — the per-tier preservation of single-op coalescing."""
+        run: List[Tuple[BackingStore, int, int, int]] = []
+        for seg in segs:
+            if run and (seg[0] is run[-1][0]
+                        and seg[1] == run[-1][1] + run[-1][3]):
+                run.append(seg)
+            else:
+                if run:
+                    yield run
+                run = [seg]
+        if run:
+            yield run
+
+    # ---------------------------------------------------------------- reads
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        return self.read_into_batch(offset, [buf])
+
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        total = sum(b.nbytes for b in bufs)
+        n = max(0, min(total, self.slow.size - offset))
+        if n < total:
+            for m in _slice_bufs(bufs, n, total - n):
+                m[:] = 0
+        if n == 0:
+            self._count_read(0)
+            return 0
+        with self._lock:
+            segs, exts = self._plan_locked(offset, n, write=False)
+        try:
+            # I/O outside the residency lock; pins keep the routing valid.
+            for run in self._runs(segs):
+                store, dev, b_off, _ = run[0]
+                length = sum(s[3] for s in run)
+                store.read_into_batch(dev, _slice_bufs(bufs, b_off, length))
+        finally:
+            self._unpin(exts)
+        self._count_read(n)
+        if self.promote_on_read:
+            self._promote_misses(offset, n)
+        return n
+
+    def _promote_misses(self, offset: int, length: int) -> None:
+        """Inline read-through promotion: only into FREE slots, never
+        evicting (eviction-based placement is the migration engine's job)."""
+        first = offset // self.extent_size
+        last = (offset + length - 1) // self.extent_size
+        for ext in range(first, last + 1):
+            with self._lock:
+                if ext in self._slot or not self._free:
+                    continue
+            self.promote(ext)
+
+    # ---------------------------------------------------------------- writes
+
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        return self.write_from_batch(offset, [buf])
+
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        total = sum(b.nbytes for b in bufs)
+        n = max(0, min(total, self.slow.size - offset))
+        if n == 0:
+            self._count_write(0)
+            return 0
+        with self._lock:
+            segs, exts = self._plan_locked(offset, n, write=True)
+        try:
+            for run in self._runs(segs):
+                store, dev, b_off, _ = run[0]
+                length = sum(s[3] for s in run)
+                store.write_from_batch(dev, _slice_bufs(bufs, b_off, length))
+        finally:
+            self._unpin(exts, write=True)
+        self._count_write(n)
+        if self.promote_on_write:
+            self._promote_misses(offset, n)
+        return n
+
+    # -------------------------------------------- migration (DESIGN.md §14.2)
+
+    def promote(self, ext: int) -> bool:
+        """Copy an extent into the fast tier: copy → verify gen → flip.
+
+        Returns False when the extent is already resident, no fast slot is
+        free, or a concurrent write raced the staging copy (the generation
+        check) — the caller (migration engine) simply retries a later
+        cycle.  Concurrent *reads* need no guard: they route to the slow
+        tier until the flip, and slow-tier bytes stay valid throughout.
+        """
+        if not 0 <= ext < self.num_extents:
+            return False
+        nbytes = self._extent_nbytes(ext)
+        with self._lock:
+            if ext in self._slot or not self._free:
+                return False
+            gen0 = self._gen.get(ext, 0)
+            slot = self._free.pop()      # reserve: invisible until the flip
+        staging = np.empty(nbytes, np.uint8)
+        try:
+            self.slow.read_into(ext * self.extent_size, staging)
+            self.fast.write_from(slot * self.extent_size, staging)
+        except Exception:
+            with self._lock:
+                self._free.append(slot)
+            raise
+        with self._lock:
+            # Commit requires: no completed write since the staging copy
+            # (generation), AND no write still in flight (a writer bumps
+            # gen before its slow-tier I/O lands, so gen alone misses it).
+            if (self._gen.get(ext, 0) != gen0 or ext in self._slot
+                    or self._wpins.get(ext, 0) > 0):
+                self._free.append(slot)          # raced a write: abort
+                self.migration_aborts += 1
+                return False
+            self._slot[ext] = slot
+            self.promotions += 1
+            return True
+
+    def demote(self, ext: int) -> bool:
+        """Evict an extent from the fast tier (write-back if dirty):
+        copy → verify gen → flip residency → free slot.
+
+        Refuses pinned extents — a pin marks an in-flight read routed to
+        the fast slot this demotion would free — and ``pin_fast`` hints.
+        """
+        with self._lock:
+            slot = self._slot.get(ext)
+            if (slot is None or ext in self._pinned_fast
+                    or self._pins.get(ext, 0) > 0):
+                return False
+            dirty = ext in self._dirty
+            gen0 = self._gen.get(ext, 0)
+            if not dirty:
+                # Clean: fast == slow, flip under this same hold.
+                del self._slot[ext]
+                self._free.append(slot)
+                self.demotions += 1
+                return True
+        nbytes = self._extent_nbytes(ext)
+        staging = np.empty(nbytes, np.uint8)
+        self.fast.read_into(slot * self.extent_size, staging)
+        self.slow.write_from(ext * self.extent_size, staging)
+        with self._lock:
+            if self._gen.get(ext, 0) != gen0 or self._pins.get(ext, 0) > 0:
+                self.migration_aborts += 1       # raced a write/read: abort
+                return False
+            self._dirty.discard(ext)
+            del self._slot[ext]
+            self._free.append(slot)
+            self.demotions += 1
+            return True
+
+    def free_fast_slots(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    # ------------------------------------------------ tier hints (§14.3)
+
+    def pin_fast(self, extents: Iterable[int]) -> None:
+        """Pin extents to the fast tier (``tier_hint="pin_fast"``): demotion
+        refuses them; the migration engine promotes them at top priority."""
+        with self._lock:
+            self._pinned_fast.update(
+                e for e in extents if 0 <= e < self.num_extents)
+
+    def unpin_fast(self, extents: Iterable[int]) -> None:
+        with self._lock:
+            self._pinned_fast.difference_update(extents)
+
+    def mark_cold(self, extents: Iterable[int]) -> None:
+        """Queue extents for demotion (``tier_hint="cold"``); the migration
+        engine drains the queue on its next cycle."""
+        with self._lock:
+            self._cold.update(e for e in extents if 0 <= e < self.num_extents)
+            self._pinned_fast.difference_update(self._cold)
+
+    def take_cold_hints(self) -> List[int]:
+        with self._lock:
+            out = sorted(self._cold)
+            self._cold.clear()
+            return out
+
+    def pinned_fast_extents(self) -> List[int]:
+        with self._lock:
+            return sorted(self._pinned_fast)
+
+    # ----------------------------------------------------------------- flush
+
+    def flush(self) -> None:
+        """Write every dirty resident extent back to the slow tier, then
+        flush both tiers (extents stay resident — flush is not demotion)."""
+        while True:
+            with self._lock:
+                dirty = [(e, self._slot[e], self._gen.get(e, 0))
+                         for e in sorted(self._dirty)]
+            if not dirty:
+                break
+            for ext, slot, gen0 in dirty:
+                # Pin before the staging copy: a concurrent demote would
+                # free the slot (and a promote could reuse it for a
+                # DIFFERENT extent — the gen check alone cannot see that);
+                # pins block demotion, so slot identity is stable below.
+                with self._lock:
+                    if self._slot.get(ext) != slot:
+                        continue      # migrated since the snapshot
+                    self._pins[ext] = self._pins.get(ext, 0) + 1
+                try:
+                    nbytes = self._extent_nbytes(ext)
+                    staging = np.empty(nbytes, np.uint8)
+                    self.fast.read_into(slot * self.extent_size, staging)
+                    self.slow.write_from(ext * self.extent_size, staging)
+                finally:
+                    self._unpin([ext])
+                with self._lock:
+                    # Same two-part commit as promote: unchanged generation
+                    # AND no write still in flight (a writer bumps gen
+                    # before its fast-tier I/O lands, so the staging copy
+                    # may be torn even at an unchanged gen).
+                    if (self._gen.get(ext, 0) == gen0
+                            and self._wpins.get(ext, 0) == 0):
+                        self._dirty.discard(ext)
+                    # else: re-dirtied mid-copy — the outer loop re-runs
+        self.fast.flush()
+        self.slow.flush()
+
+    def close(self) -> None:
+        self.fast.close()
+        self.slow.close()
+
+
+class FaultyStore(BackingStore):
+    """Fault-injection wrapper: fail I/O after N successful operations.
+
+    The regression harness for the end-to-end error-propagation contract
+    (DESIGN.md §14.4): wrap any store, let ``fail_after_reads`` /
+    ``fail_after_writes`` operations succeed, then raise ``exc_type`` on
+    the following ``fail_count`` operations (default: forever).  Batch ops
+    count as ONE operation, mirroring their single-syscall semantics.
+    Thread-safe; ``reads_attempted`` / ``writes_attempted`` include the
+    failed operations.
+    """
+
+    def __init__(self, inner: BackingStore,
+                 fail_after_reads: Optional[int] = None,
+                 fail_after_writes: Optional[int] = None,
+                 fail_count: Optional[int] = None,
+                 exc_type: type = OSError):
+        self.inner = inner
+        self.fail_after_reads = fail_after_reads
+        self.fail_after_writes = fail_after_writes
+        self.fail_count = fail_count
+        self.exc_type = exc_type
+        self.batch_read_hint = inner.batch_read_hint
+        self.batch_write_hint = inner.batch_write_hint
+        self._lock = threading.Lock()
+        self.reads_attempted = 0
+        self.writes_attempted = 0
+        self.reads_failed = 0
+        self.writes_failed = 0
+        self.reset_stats()
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def _gate(self, kind: str) -> None:
+        with self._lock:
+            attempted = getattr(self, f"{kind}s_attempted")
+            setattr(self, f"{kind}s_attempted", attempted + 1)
+            threshold = getattr(self, f"fail_after_{kind}s")
+            if threshold is None or attempted < threshold:
+                return
+            failed = getattr(self, f"{kind}s_failed")
+            if self.fail_count is not None and failed >= self.fail_count:
+                return
+            setattr(self, f"{kind}s_failed", failed + 1)
+        raise self.exc_type(
+            f"injected {kind} failure #{failed + 1} after "
+            f"{threshold} successful {kind}s")
+
+    def read_into(self, offset: int, buf: np.ndarray) -> int:
+        self._gate("read")
+        n = self.inner.read_into(offset, buf)
+        self._count_read(n)
+        return n
+
+    def read_into_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        self._gate("read")
+        n = self.inner.read_into_batch(offset, bufs)
+        self._count_read(n)
+        return n
+
+    def write_from(self, offset: int, buf: np.ndarray) -> int:
+        self._gate("write")
+        n = self.inner.write_from(offset, buf)
+        self._count_write(n)
+        return n
+
+    def write_from_batch(self, offset: int, bufs: Sequence[np.ndarray]) -> int:
+        self._gate("write")
+        n = self.inner.write_from_batch(offset, bufs)
+        self._count_write(n)
+        return n
+
+    def flush(self) -> None:
+        self.inner.flush()
+
+    def close(self) -> None:
+        self.inner.close()

@@ -95,12 +95,30 @@ class RegionLayerSource:
     (``lease_run`` caps runs at half the buffer); the device pool holds
     ``pool_pages`` pages (default: enough for every layer) evicted
     layer-at-a-time FIFO.
+
+    ``pin_fast_layers`` is the tiered-store opt-in (DESIGN.md §14.3): when
+    the region's store is a ``TieredStore`` (host fast tier over an
+    NVMe/remote weight file), the named layers' page ranges are advised
+    ``tier_hint="pin_fast"`` so they stay fast-tier resident under any
+    migration pressure — e.g. the embedding layer and final head, which
+    every request touches regardless of the streaming sweep.
     """
 
     def __init__(self, region, specs: Sequence[dict], device=None,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 pin_fast_layers: Sequence[int] = ()):
         self.region = region
         self.specs = list(specs)
+        if pin_fast_layers:
+            if not getattr(region, "tiered", False):
+                raise ValueError(
+                    "pin_fast_layers requires a TieredStore-backed region")
+            ps = region.page_size
+            for i in pin_fast_layers:
+                spec = self.specs[i]
+                region.advise(tier_hint="pin_fast",
+                              offset=spec["first_page"] * ps,
+                              nbytes=spec["npages"] * ps)
         self.device = device or jax.devices()[0]
         self.dtype = np.dtype(self.specs[0]["dtype"])
         if any(np.dtype(s["dtype"]) != self.dtype for s in self.specs):

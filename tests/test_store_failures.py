@@ -1,0 +1,318 @@
+"""End-to-end I/O error propagation (DESIGN.md §14.4).
+
+The seed swallowed backing-store exceptions in the filler and cleaner
+pools (``traceback.print_exc`` + abandon), which turned a failing store
+into an infinite re-fault loop on the read side and silently stranded
+dirty pages on the write side.  These tests pin the repaired contract:
+
+  * a fill that dies on a store exception raises ``IOError`` at every
+    blocked fault site within one wait timeout — no hang, no re-fault
+    loop — and counts in the ``io_errors`` shard counter;
+  * a failed write-back retries (bounded by ``writeback_retries``), then
+    quarantines the page (resident + dirty, never dropped) and
+    ``flush_region`` raises; transient failures recover through the
+    retry path;
+  * fault injection is exercised across all five concrete stores, single
+    and batched ops, via the reusable ``FaultyStore`` wrapper;
+  * the multi-shard ``_abandon_fills`` regression: abandoning a batch
+    spanning several stripes wakes every stripe's waiters.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultyStore,
+    FileStore,
+    HostArrayStore,
+    MultiFileStore,
+    RemoteStore,
+    SyntheticStore,
+    UMapConfig,
+    umap,
+    uunmap,
+)
+
+PAGE = 4096
+NPAGES = 64
+
+
+def _pattern_gen(offset: int, buf: np.ndarray) -> None:
+    n = buf.nbytes
+    buf[:] = (np.arange(offset, offset + n, dtype=np.int64) % 251).astype(np.uint8)
+
+
+def _expected(offset: int, nbytes: int) -> np.ndarray:
+    return (np.arange(offset, offset + nbytes, dtype=np.int64) % 251).astype(np.uint8)
+
+
+def _make_store(kind: str, tmp_path):
+    """One of the five concrete stores, pre-filled with the pattern."""
+    data = _expected(0, NPAGES * PAGE)
+    if kind == "host":
+        return HostArrayStore(data.copy())
+    if kind == "file":
+        p = tmp_path / "store.bin"
+        data.tofile(p)
+        return FileStore(str(p))
+    if kind == "multifile":
+        half = NPAGES * PAGE // 2
+        pa, pb = tmp_path / "a.bin", tmp_path / "b.bin"
+        data[:half].tofile(pa)
+        data[half:].tofile(pb)
+        return MultiFileStore([(FileStore(str(pa)), 0, half),
+                               (FileStore(str(pb)), 0, half)])
+    if kind == "remote":
+        return RemoteStore(HostArrayStore(data.copy()), latency_s=1e-4)
+    if kind == "synthetic":
+        return SyntheticStore(NPAGES * PAGE, _pattern_gen)
+    raise ValueError(kind)
+
+
+ALL_STORES = ("host", "file", "multifile", "remote", "synthetic")
+
+
+def _region(store, **cfg_kw):
+    cfg = UMapConfig(page_size=PAGE, buffer_size=16 * PAGE, num_fillers=2,
+                     num_evictors=1, **cfg_kw)
+    return umap(store, config=cfg)
+
+
+# ------------------------------------------------------ FaultyStore wrapper
+
+
+def test_faulty_store_gating_and_counters():
+    st = FaultyStore(HostArrayStore(np.zeros(8 * PAGE, np.uint8)),
+                     fail_after_reads=2, fail_after_writes=1, fail_count=1)
+    buf = np.empty(PAGE, np.uint8)
+    st.read_into(0, buf)
+    st.read_into_batch(0, [buf])          # a batch op counts as ONE operation
+    with pytest.raises(OSError):
+        st.read_into(0, buf)
+    st.read_into(0, buf)                  # fail_count=1: recovered
+    st.write_from(0, buf)
+    with pytest.raises(OSError):
+        st.write_from_batch(0, [buf])
+    assert st.reads_attempted == 4 and st.reads_failed == 1
+    assert st.writes_attempted == 2 and st.writes_failed == 1
+
+
+# ------------------------------------------------- fill (read) failures
+
+
+@pytest.mark.parametrize("kind", ALL_STORES)
+@pytest.mark.parametrize("batch", [1, 8], ids=["single", "batched"])
+def test_fill_failure_raises_ioerror_no_hang(kind, batch, tmp_path):
+    store = FaultyStore(_make_store(kind, tmp_path), fail_after_reads=0)
+    region = _region(store, max_batch_pages=batch)
+    t0 = time.perf_counter()
+    with pytest.raises(IOError):
+        region.read(0, 4 * PAGE)          # multi-page: exercises batch path
+    assert time.perf_counter() - t0 < 5.0, "fault site must not hang"
+    snap = region.stats()
+    assert snap["io_errors"] >= 1
+    # The store recovers: a FRESH fault retries and succeeds (failed fills
+    # leave the table; the application's retry is a new fault).
+    store.fail_after_reads = None
+    out = region.read(0, 4 * PAGE)
+    assert np.array_equal(out, _expected(0, 4 * PAGE))
+    uunmap(region)
+
+
+def test_fill_failure_propagates_to_every_waiter():
+    store = FaultyStore(
+        RemoteStore(HostArrayStore(np.zeros(NPAGES * PAGE, np.uint8)),
+                    latency_s=0.02),
+        fail_after_reads=0)
+    region = _region(store)
+    results = []
+
+    def reader():
+        try:
+            region.read(0, PAGE)          # same page: all block on one fill
+            results.append("ok")
+        except IOError:
+            results.append("ioerror")
+
+    ts = [threading.Thread(target=reader) for _ in range(4)]
+    [t.start() for t in ts]
+    [t.join(timeout=10.0) for t in ts]
+    assert not any(t.is_alive() for t in ts), "a waiter slept through the error"
+    assert results == ["ioerror"] * 4
+    uunmap(region)
+
+
+def test_fill_callback_failure_raises_ioerror():
+    def bad_fill(page_no, buf):
+        raise RuntimeError("app resolver died")
+
+    region = _region(HostArrayStore(np.zeros(NPAGES * PAGE, np.uint8)),
+                     fill_callback=bad_fill)
+    with pytest.raises(IOError):
+        region.read(0, PAGE)
+    uunmap(region)
+
+
+def test_fill_failure_does_not_leak_buffer_slots():
+    store = FaultyStore(HostArrayStore(_expected(0, NPAGES * PAGE)),
+                        fail_after_reads=0, fail_count=20)
+    region = _region(store)
+    for lo in range(0, 20 * PAGE, PAGE):
+        with pytest.raises(IOError):
+            region.read(lo, PAGE)
+    store.fail_after_reads = None
+    # 16-slot buffer: if failed fills leaked their slots, filling the whole
+    # region would stall on allocation instead of evicting through.
+    out = region.read(0, NPAGES * PAGE)
+    assert np.array_equal(out, _expected(0, NPAGES * PAGE))
+    assert region.service.buffer.used_slots <= 16
+    uunmap(region)
+
+
+# ------------------------------------------------ write-back failures
+
+
+@pytest.mark.parametrize("kind", ALL_STORES)
+@pytest.mark.parametrize("npages_dirty", [1, 4], ids=["single", "batched"])
+def test_writeback_transient_failure_recovers(kind, npages_dirty, tmp_path):
+    # 4 adjacent dirty pages coalesce into ONE write_from_batch run, so the
+    # batched variant injects the failure into the vectorized write path.
+    store = FaultyStore(_make_store(kind, tmp_path), fail_after_writes=0,
+                        fail_count=1)
+    region = _region(store)
+    payload = np.full(npages_dirty * PAGE, 7, np.uint8)
+    region.write(3 * PAGE, payload)
+    region.flush()                         # retry path absorbs the one failure
+    snap = region.stats()
+    assert snap["writeback_errors"] >= 1
+    assert snap["quarantined_pages"] == 0
+    check = np.empty(npages_dirty * PAGE, np.uint8)
+    store.read_into(3 * PAGE, check)
+    assert (check == 7).all(), "retried write-back must persist the bytes"
+    uunmap(region)
+
+
+def test_writeback_retry_budget_resets_per_episode():
+    """Review regression: wb_retries must reset on a successful write-back
+    — N transient failures spread over a page's lifetime must not
+    quarantine it (the bound is per episode, not cumulative)."""
+    store = FaultyStore(HostArrayStore(np.zeros(NPAGES * PAGE, np.uint8)))
+    cfg = UMapConfig(page_size=PAGE, buffer_size=16 * PAGE, num_fillers=2,
+                     num_evictors=1, writeback_retries=2)
+    region = umap(store, config=cfg)
+    for episode in range(3):
+        # Fail exactly the NEXT write, then recover: one transient failure
+        # per episode, each within the 2-attempt budget.
+        store.fail_after_writes = store.writes_attempted
+        store.fail_count = store.writes_failed + 1
+        region.write(0, np.full(PAGE, 50 + episode, np.uint8))
+        region.flush()
+    snap = region.stats()
+    assert snap["writeback_errors"] == 3
+    assert snap["quarantined_pages"] == 0, \
+        "transient failures across episodes must not accumulate to quarantine"
+    check = np.empty(PAGE, np.uint8)
+    store.read_into(0, check)
+    assert (check == 52).all()
+    uunmap(region)
+
+
+def test_writeback_exhaustion_quarantines_and_flush_raises():
+    store = FaultyStore(HostArrayStore(np.zeros(NPAGES * PAGE, np.uint8)),
+                        fail_after_writes=0)
+    cfg = UMapConfig(page_size=PAGE, buffer_size=16 * PAGE, num_fillers=2,
+                     num_evictors=1, writeback_retries=2)
+    region = umap(store, config=cfg)
+    region.write(0, np.full(PAGE, 9, np.uint8))
+    with pytest.raises(IOError):
+        region.flush()
+    snap = region.stats()
+    assert snap["writeback_errors"] >= 2      # bounded retries, all counted
+    assert snap["quarantined_pages"] == 1
+    # The quarantined page's bytes are still served from the buffer — the
+    # dirty data is stranded, not lost.
+    assert (region.read(0, PAGE) == 9).all()
+    # Recovery after the store comes back: un-quarantine is not automatic
+    # (by design), but the service still shuts down cleanly.
+    store.fail_after_writes = None
+    with pytest.raises(IOError):
+        uunmap(region)                        # close flushes -> still reports
+    # Review regression: the raise must not leak the region or the owned
+    # service — unregistration and thread shutdown happen either way.
+    assert region.region_id not in region.service._regions
+    assert region.service._closed
+
+
+def test_quarantined_page_never_evicted_under_pressure():
+    store = FaultyStore(HostArrayStore(_expected(0, NPAGES * PAGE)),
+                        fail_after_writes=0)
+    cfg = UMapConfig(page_size=PAGE, buffer_size=8 * PAGE, num_fillers=2,
+                     num_evictors=1, writeback_retries=1)
+    region = umap(store, config=cfg)
+    region.write(0, np.full(PAGE, 5, np.uint8))
+    with pytest.raises(IOError):
+        region.flush()                        # quarantine page 0
+    # Capacity churn over the whole region: the quarantined page must
+    # survive (evicting it would drop the only copy of its dirty bytes).
+    for p in range(1, NPAGES):
+        region.read(p * PAGE, PAGE)
+    assert (region.read(0, PAGE) == 5).all()
+    snap = region.stats()
+    assert snap["quarantined_pages"] == 1
+
+
+# ---------------------------------------------- multi-shard abandon (§14.4)
+
+
+def test_abandon_fills_wakes_waiters_on_every_shard():
+    """Closing a region with queued fills + waiters spanning all stripes:
+    every waiter must observe the closing gate promptly (the audit's
+    regression: no stripe's waiters may sleep through the abandon)."""
+    store = RemoteStore(HostArrayStore(np.zeros(NPAGES * PAGE, np.uint8)),
+                        latency_s=0.05)
+    cfg = UMapConfig(page_size=PAGE, buffer_size=32 * PAGE, num_fillers=2,
+                     num_evictors=1, shards=8, max_batch_pages=1)
+    region = umap(store, config=cfg)
+    assert len(region.service.shards) == 8
+    outcomes = []
+    started = threading.Barrier(9)
+
+    def reader(p):
+        started.wait()
+        try:
+            region.read(p * PAGE, PAGE)
+            outcomes.append("ok")
+        except (RuntimeError, IOError):
+            outcomes.append("closed")
+
+    # One waiter per shard-ish: 8 distinct pages hash across the stripes.
+    ts = [threading.Thread(target=reader, args=(p,)) for p in range(8)]
+    [t.start() for t in ts]
+    started.wait()
+    time.sleep(0.01)                  # let the faults post + block
+    region.close()
+    [t.join(timeout=10.0) for t in ts]
+    assert not any(t.is_alive() for t in ts), \
+        "a waiter slept through a multi-shard abandon"
+    assert len(outcomes) == 8
+    region.service.close()
+
+
+# ------------------------------------------------------- stats parity
+
+
+def test_error_counters_in_snapshot_and_per_shard():
+    store = FaultyStore(HostArrayStore(np.zeros(NPAGES * PAGE, np.uint8)),
+                        fail_after_reads=0, fail_count=1)
+    region = _region(store)
+    with pytest.raises(IOError):
+        region.read(0, PAGE)
+    snap = region.stats()
+    for key in ("io_errors", "writeback_errors", "quarantined_pages"):
+        assert key in snap
+        assert all(key in s for s in snap["per_shard"])
+    assert snap["io_errors"] == sum(s["io_errors"] for s in snap["per_shard"])
+    uunmap(region)

@@ -1,0 +1,545 @@
+"""Tiered store + heat-driven migration (DESIGN.md §14).
+
+Covers: TieredStore read-through/write-back semantics and per-tier batch
+splitting (single-op coalescing preserved per tier), the transactional
+promote/demote protocol (generation verify, pin refusal), the pager's
+heat-driven migration engine end to end, application tier hints
+(hot/cold/pin_fast through ``region.advise``), the mid-migration fault
+storm byte-exactness acceptance check, error propagation through a tiered
+region (FaultyStore on the slow tier), config/env parity for the
+``UMAP_TIER_*`` knobs, and the checkpoint fast-tier opt-in.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultyStore,
+    HostArrayStore,
+    RemoteStore,
+    TieredStore,
+    TierHint,
+    UMapConfig,
+    umap,
+    uunmap,
+)
+
+PAGE = 4096
+EXTENT = 4 * PAGE
+NPAGES = 128
+
+
+def _data(nbytes: int) -> np.ndarray:
+    return (np.arange(nbytes, dtype=np.int64) % 251).astype(np.uint8)
+
+
+def _tiered(fast_extents: int = 4, **kw) -> TieredStore:
+    slow = HostArrayStore(_data(NPAGES * PAGE))
+    fast = HostArrayStore(np.zeros(fast_extents * EXTENT, np.uint8))
+    kw.setdefault("extent_size", EXTENT)
+    kw.setdefault("promote_on_read", False)
+    return TieredStore(fast, slow, **kw)
+
+
+# ------------------------------------------------------------ store semantics
+
+
+def test_read_through_and_residency_routing():
+    ts = _tiered()
+    ref = _data(NPAGES * PAGE)
+    buf = np.empty(3 * PAGE, np.uint8)
+    ts.read_into(PAGE, buf)
+    assert np.array_equal(buf, ref[PAGE : 4 * PAGE])
+    assert ts.promote(0)
+    assert ts.resident_extents() == [0]
+    slow_reads = ts.slow.num_reads
+    ts.read_into(0, buf)                  # extent 0 resident: fast only
+    assert np.array_equal(buf, ref[: 3 * PAGE])
+    assert ts.slow.num_reads == slow_reads
+    # spanning resident extent 0 -> non-resident extent 1 splits per tier
+    span = np.empty(2 * PAGE, np.uint8)
+    ts.read_into(3 * PAGE, span)
+    assert np.array_equal(span, ref[3 * PAGE : 5 * PAGE])
+    assert ts.slow.num_reads == slow_reads + 1
+
+
+def test_write_back_dirty_extents_flush_to_slow():
+    ts = _tiered()
+    assert ts.promote(2)
+    slow_writes = ts.slow.num_writes
+    payload = np.full(100, 9, np.uint8)
+    ts.write_from(2 * EXTENT + 10, payload)
+    assert ts.slow.num_writes == slow_writes, "resident write stays in fast"
+    assert ts.tier_stats()["dirty_extents"] == 1
+    back = np.empty(100, np.uint8)
+    ts.read_into(2 * EXTENT + 10, back)
+    assert (back == 9).all()
+    ts.flush()
+    assert ts.tier_stats()["dirty_extents"] == 0
+    check = np.empty(100, np.uint8)
+    ts.slow.read_into(2 * EXTENT + 10, check)
+    assert (check == 9).all()
+    # non-resident write goes straight to slow (write-around)
+    ts.write_from(5 * EXTENT, payload)
+    check2 = np.empty(100, np.uint8)
+    ts.slow.read_into(5 * EXTENT, check2)
+    assert (check2 == 9).all()
+
+
+def test_batch_ops_split_per_tier_preserve_coalescing():
+    ts = _tiered(fast_extents=8)
+    ref = _data(NPAGES * PAGE)
+    assert ts.promote(1) and ts.promote(2)       # resident run [1,2]
+    slow_reads = ts.slow.num_reads
+    bufs = [np.empty(PAGE, np.uint8) for _ in range(6 * EXTENT // PAGE)]
+    ts.read_into_batch(0, bufs)                  # extents 0..5
+    assert np.array_equal(np.concatenate(bufs), ref[: 6 * EXTENT])
+    # extents [0] and [3,4,5] are the two non-resident runs: exactly TWO
+    # slow batched calls, not one per page/extent (coalescing preserved).
+    assert ts.slow.num_reads == slow_reads + 2
+    # batched write: extents 1-2 resident -> fast, 3 -> slow, one call each
+    slow_writes = ts.slow.num_writes
+    wbufs = [np.full(PAGE, 7, np.uint8) for _ in range(3 * EXTENT // PAGE)]
+    ts.write_from_batch(EXTENT, wbufs)
+    assert ts.slow.num_writes == slow_writes + 1
+    out = np.empty(3 * EXTENT, np.uint8)
+    ts.read_into(EXTENT, out)
+    assert (out == 7).all()
+
+
+def test_short_final_extent_and_eof_zero_fill():
+    slow = HostArrayStore(_data(EXTENT + PAGE))  # 1.25 extents
+    ts = TieredStore(HostArrayStore(np.zeros(2 * EXTENT, np.uint8)), slow,
+                     extent_size=EXTENT, promote_on_read=False)
+    assert ts.num_extents == 2
+    assert ts.promote(1)                          # short extent promotes too
+    buf = np.full(2 * PAGE, 7, np.uint8)
+    got = ts.read_into(EXTENT, buf)
+    assert got == PAGE
+    assert np.array_equal(buf[:PAGE], _data(EXTENT + PAGE)[EXTENT:])
+    assert (buf[PAGE:] == 0).all()
+
+
+def test_promote_aborts_on_racing_write():
+    ts = _tiered()
+    orig = ts.slow.read_into
+
+    def racing_read(offset, buf):
+        n = orig(offset, buf)
+        # A write lands between the staging copy and the commit: the
+        # generation check must abort the promotion (torn-extent guard).
+        ts.write_from(offset, np.full(8, 1, np.uint8))
+        return n
+
+    ts.slow.read_into = racing_read
+    assert ts.promote(0) is False
+    assert ts.migration_aborts == 1
+    ts.slow.read_into = orig
+    assert ts.promote(0) is True                  # clean retry succeeds
+
+
+def test_promote_aborts_on_in_flight_write():
+    """Review regression: a writer bumps the generation BEFORE its
+    slow-tier I/O lands, so promote's commit must also refuse write-
+    pinned extents — or it would publish the pre-write bytes."""
+    ts = _tiered()
+    orig = ts.slow.write_from_batch
+    raced = {}
+
+    def hook(offset, bufs):
+        # Mid write-around (gen bumped, bytes not yet in slow): a promote
+        # staged NOW would capture stale data — commit must abort.
+        raced["promote"] = ts.promote(0)
+        return orig(offset, bufs)
+
+    ts.slow.write_from_batch = hook
+    ts.write_from(0, np.full(100, 3, np.uint8))
+    ts.slow.write_from_batch = orig
+    assert raced["promote"] is False
+    assert ts.migration_aborts == 1
+    assert ts.promote(0) is True                  # quiesced: succeeds
+    out = np.empty(100, np.uint8)
+    ts.read_into(0, out)
+    assert (out == 3).all(), "promoted copy must carry the racing write"
+
+
+def test_flush_pins_extent_against_slot_recycling():
+    """Review regression: flush's staging copy must pin the extent — a
+    concurrent demote would free the slot (and a promote could reuse it
+    for a different extent), corrupting the slow tier at commit."""
+    ts = _tiered()
+    assert ts.promote(0)
+    ts.write_from(10, np.full(50, 9, np.uint8))     # extent 0 dirty
+    raced = {}
+    orig = ts.fast.read_into
+
+    def racing_read(offset, buf):
+        n = orig(offset, buf)
+        # Mid-staging: demotion must be refused by the flush pin.
+        raced["demote"] = ts.demote(0)
+        return n
+
+    ts.fast.read_into = racing_read
+    ts.flush()
+    ts.fast.read_into = orig
+    assert raced["demote"] is False
+    check = np.empty(50, np.uint8)
+    ts.slow.read_into(10, check)
+    assert (check == 9).all()
+
+
+def test_flush_does_not_mark_clean_under_in_flight_write():
+    """Review regression: flush's commit, like promote's, must refuse an
+    extent with a write still in flight — gen is bumped before the write
+    I/O lands, so the staging copy may be torn at an unchanged gen."""
+    ts = _tiered()
+    assert ts.promote(0)
+    ts.write_from(10, np.full(50, 9, np.uint8))     # extent 0 dirty
+    calls = {"n": 0}
+    orig = ts.fast.read_into
+
+    def hook(offset, buf):
+        calls["n"] += 1
+        with ts._lock:                 # deterministic stand-in for a
+            if calls["n"] == 1:        # writer mid fast-tier I/O
+                ts._wpins[0] = 1
+            else:
+                ts._wpins.pop(0, None)
+        return orig(offset, buf)
+
+    ts.fast.read_into = hook
+    ts.flush()
+    ts.fast.read_into = orig
+    assert calls["n"] >= 2, "first commit must be refused and retried"
+    assert ts.tier_stats()["dirty_extents"] == 0
+    check = np.empty(50, np.uint8)
+    ts.slow.read_into(10, check)
+    assert (check == 9).all()
+
+
+def test_demote_refuses_pins_and_pin_fast():
+    ts = _tiered()
+    assert ts.promote(0) and ts.promote(1)
+    ts.pin_fast([0])
+    assert ts.demote(0) is False                  # pin_fast hint
+    assert ts.demote(1) is True
+    ts.unpin_fast([0])
+    assert ts.demote(0) is True
+
+
+def test_from_config_uses_tier_budget():
+    cfg = UMapConfig(tier_fast_bytes=4 * EXTENT, tier_extent_size=EXTENT)
+    ts = TieredStore.from_config(HostArrayStore(_data(NPAGES * PAGE)), cfg)
+    assert ts.num_fast_slots == 4 and ts.extent_size == EXTENT
+    # Pager pairing: placement is the migration engine's job — inline
+    # read-through promotion would amplify every warm-up miss (review fix).
+    assert ts.promote_on_read is False
+    with pytest.raises(ValueError):
+        TieredStore.from_config(
+            HostArrayStore(_data(PAGE)), UMapConfig())   # no budget set
+
+
+# -------------------------------------------------------- migration engine
+
+
+def _storm_cfg(**kw):
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("buffer_size", 8 * PAGE)   # below the hot set: re-faults
+    kw.setdefault("num_fillers", 2)
+    kw.setdefault("num_evictors", 1)
+    kw.setdefault("tier_interval_s", 0.01)
+    kw.setdefault("tier_decay", 0.9)
+    return UMapConfig(**kw)
+
+
+def _hammer(region, pages, rounds=40):
+    ref = _data(NPAGES * PAGE)
+    for _ in range(rounds):
+        for p in pages:
+            got = region.read(p * PAGE, PAGE)
+            assert np.array_equal(got, ref[p * PAGE : (p + 1) * PAGE])
+
+
+def _wait_resident(ts, extents, timeout=5.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if set(extents) <= set(ts.resident_extents()):
+            return True
+        time.sleep(0.02)
+    return False
+
+
+@pytest.mark.slow
+def test_heat_driven_promotion_end_to_end():
+    ts = _tiered(fast_extents=2)
+    region = umap(ts, config=_storm_cfg())
+    # Hot set: pages 0..7 = extents 0..1; buffer (8 pages) churns them.
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        _hammer(region, range(8), rounds=1)
+        region.read(int(rng.integers(16, NPAGES)) * PAGE, PAGE)  # cold noise
+    assert _wait_resident(ts, [0, 1]), \
+        f"hot extents not promoted: {ts.resident_extents()}"
+    snap = region.stats()
+    assert snap["tier_promotions"] >= 2
+    # Promoted extents now absorb the hot faults: slow reads stop growing.
+    slow_reads = ts.slow.num_reads
+    _hammer(region, range(8), rounds=5)
+    assert ts.slow.num_reads <= slow_reads + 2
+    uunmap(region)
+
+
+@pytest.mark.slow
+def test_tier_hints_hot_cold_pin_fast():
+    ts = _tiered(fast_extents=2)
+    region = umap(ts, config=_storm_cfg())
+    # hot: promote ahead of any observed access
+    region.advise(tier_hint="hot", offset=2 * EXTENT, nbytes=2 * EXTENT)
+    assert _wait_resident(ts, [2, 3])
+    # cold: demote what the app is done with
+    region.advise(tier_hint=TierHint.COLD, offset=2 * EXTENT, nbytes=EXTENT)
+    deadline = time.time() + 5.0
+    while 2 in ts.resident_extents() and time.time() < deadline:
+        time.sleep(0.02)
+    assert 2 not in ts.resident_extents()
+    # pin_fast: resident AND immune to cold-driven demotion pressure
+    region.advise(tier_hint="pin_fast", offset=0, nbytes=EXTENT)
+    assert _wait_resident(ts, [0])
+    _hammer(region, range(8, 16), rounds=30)      # heat up extents 2..3
+    time.sleep(0.3)
+    assert 0 in ts.resident_extents(), "pin_fast extent was demoted"
+    uunmap(region)
+
+
+@pytest.mark.slow
+def test_cold_hint_retried_until_demotable():
+    """Review regression: a cold hint whose demote is refused (extent
+    pinned by an in-flight read) must be re-queued, not silently lost."""
+    ts = _tiered()
+    region = umap(ts, config=_storm_cfg())
+    region.advise(tier_hint="hot", offset=0, nbytes=EXTENT)
+    assert _wait_resident(ts, [0])
+    with ts._lock:                      # deterministic stand-in for an
+        ts._pins[0] = ts._pins.get(0, 0) + 1   # in-flight read's pin
+    region.advise(tier_hint="cold", offset=0, nbytes=EXTENT)
+    time.sleep(0.15)                    # several engine cycles
+    assert 0 in ts.resident_extents(), "demote must refuse a pinned extent"
+    with ts._lock:
+        ts._pins.pop(0)
+    deadline = time.time() + 5.0
+    while 0 in ts.resident_extents() and time.time() < deadline:
+        time.sleep(0.02)
+    assert 0 not in ts.resident_extents(), "re-queued cold hint never drained"
+    uunmap(region)
+
+
+def test_tier_hint_validation():
+    region = umap(HostArrayStore(_data(8 * PAGE)),
+                  config=UMapConfig(page_size=PAGE, buffer_size=4 * PAGE))
+    with pytest.raises(ValueError):
+        region.advise(tier_hint="hot")            # not a tiered region
+    with pytest.raises(ValueError):
+        region.advise()                           # no advice at all
+    uunmap(region)
+    ts_region = umap(_tiered(), config=_storm_cfg())
+    with pytest.raises(ValueError):
+        ts_region.advise(tier_hint="lukewarm")    # unknown hint string
+    with pytest.raises(IndexError):
+        # end past the region must raise, not silently clamp (review fix)
+        ts_region.advise(tier_hint="hot",
+                         offset=ts_region.size - 10, nbytes=1000)
+    uunmap(ts_region)
+
+
+@pytest.mark.slow
+def test_mid_migration_fault_storm_byte_exact():
+    """The tentpole acceptance check: concurrent faults racing promotions/
+    demotions never observe a torn extent."""
+    ts = _tiered(fast_extents=2)
+    region = umap(ts, config=_storm_cfg(shards=4, buffer_size=16 * PAGE))
+    ref = _data(NPAGES * PAGE)
+    errors: list = []
+    stop = threading.Event()
+
+    def reader(tid):
+        rng = np.random.default_rng(tid)
+        while not stop.is_set():
+            if rng.random() < 0.7:
+                p = int(rng.integers(0, 8))       # hot: drives migration
+            else:
+                p = int(rng.integers(8, NPAGES))
+            got = region.read(p * PAGE, PAGE)
+            if not np.array_equal(got, ref[p * PAGE : (p + 1) * PAGE]):
+                errors.append(p)
+                return
+
+    def hinter():
+        # Adversarial churn: flip tier hints while readers fault.
+        for i in range(20):
+            region.advise(tier_hint="hot" if i % 2 else "cold",
+                          offset=0, nbytes=2 * EXTENT)
+            time.sleep(0.02)
+
+    ts_threads = [threading.Thread(target=reader, args=(t,)) for t in range(4)]
+    ts_threads.append(threading.Thread(target=hinter))
+    [t.start() for t in ts_threads]
+    time.sleep(1.5)
+    stop.set()
+    [t.join(timeout=10.0) for t in ts_threads]
+    assert not errors, f"torn reads on pages {errors[:5]}"
+    st = region.stats()
+    assert st["tier_promotions"] + st["tier_demotions"] > 0, \
+        "storm never exercised a migration"
+    uunmap(region)
+
+
+# ------------------------------------------------- error propagation (§14.4)
+
+
+def test_tiered_region_propagates_slow_tier_failure():
+    slow = FaultyStore(HostArrayStore(_data(NPAGES * PAGE)),
+                       fail_after_reads=0)
+    ts = TieredStore(HostArrayStore(np.zeros(4 * EXTENT, np.uint8)), slow,
+                     extent_size=EXTENT, promote_on_read=False)
+    region = umap(ts, config=_storm_cfg())
+    with pytest.raises(IOError):
+        region.read(0, PAGE)
+    assert region.stats()["io_errors"] >= 1
+    slow.fail_after_reads = None
+    assert np.array_equal(region.read(0, PAGE), _data(PAGE))
+    uunmap(region)
+
+
+def test_promote_failure_returns_slot_and_engine_survives():
+    slow = FaultyStore(HostArrayStore(_data(NPAGES * PAGE)),
+                       fail_after_reads=0, fail_count=1)
+    ts = TieredStore(HostArrayStore(np.zeros(2 * EXTENT, np.uint8)), slow,
+                     extent_size=EXTENT, promote_on_read=False)
+    with pytest.raises(OSError):
+        ts.promote(0)
+    assert ts.free_fast_slots() == 2, "failed promote leaked its fast slot"
+    assert ts.promote(0) is True
+
+
+# ----------------------------------------------------------- config / env
+
+
+def test_tier_env_knobs():
+    cfg = UMapConfig.from_env(env={
+        "UMAP_TIER_FAST_BYTES": "1M",
+        "UMAP_TIER_EXTENT": "64K",
+        "UMAP_TIER_INTERVAL_MS": "100",
+        "UMAP_TIER_DECAY": "0.5",
+        "UMAP_TIER_PROMOTE_HEAT": "4",
+        "UMAP_TIER_MAX_MIGRATIONS": "2",
+        "UMAP_WRITEBACK_RETRIES": "5",
+    })
+    assert cfg.tier_fast_bytes == 1 << 20
+    assert cfg.tier_extent_size == 64 * 1024
+    assert cfg.tier_interval_s == pytest.approx(0.1)
+    assert cfg.tier_decay == 0.5
+    assert cfg.tier_promote_heat == 4.0
+    assert cfg.tier_max_migrations == 2
+    assert cfg.writeback_retries == 5
+
+
+def test_tier_config_validation():
+    with pytest.raises(ValueError):
+        UMapConfig(tier_decay=1.0)
+    with pytest.raises(ValueError):
+        UMapConfig(tier_promote_heat=0)
+    with pytest.raises(ValueError):
+        UMapConfig(tier_interval_s=0)
+    with pytest.raises(ValueError):
+        UMapConfig(writeback_retries=0)
+    with pytest.raises(ValueError):
+        TieredStore(HostArrayStore(np.zeros(PAGE, np.uint8)),
+                    HostArrayStore(_data(NPAGES * PAGE)),
+                    extent_size=2 * PAGE)          # budget < one extent
+
+
+# ------------------------------------------------ weight-pager opt-in
+
+
+@pytest.mark.slow
+def test_region_layer_source_pin_fast_layers():
+    pytest.importorskip("jax")
+    from repro.serve.weight_pager import RegionLayerSource, pack_layer_arrays
+
+    layers = [np.full((EXTENT // 4,), i, np.float32) for i in range(4)]
+    buf, specs = pack_layer_arrays(layers, page_size=PAGE)
+    ts = TieredStore(HostArrayStore(np.zeros(4 * EXTENT, np.uint8)),
+                     HostArrayStore(buf.copy()), extent_size=EXTENT,
+                     promote_on_read=False)
+    region = umap(ts, config=UMapConfig(page_size=PAGE,
+                                        buffer_size=32 * PAGE))
+    src = RegionLayerSource(region, specs, pin_fast_layers=[0])
+    spec = specs[0]
+    first_ext = (spec["first_page"] * PAGE) // EXTENT
+    last_ext = ((spec["first_page"] + spec["npages"]) * PAGE - 1) // EXTENT
+    want = list(range(first_ext, last_ext + 1))
+    assert _wait_resident(ts, want), \
+        f"pinned layer extents not promoted: {ts.resident_extents()}"
+    assert set(want) <= set(ts.pinned_fast_extents())
+    out = np.asarray(src[0])
+    assert np.array_equal(out, layers[0])
+    uunmap(region)
+
+
+def test_region_layer_source_pin_fast_requires_tiered():
+    pytest.importorskip("jax")
+    from repro.serve.weight_pager import RegionLayerSource, pack_layer_arrays
+
+    layers = [np.ones((PAGE // 4,), np.float32)]
+    buf, specs = pack_layer_arrays(layers, page_size=PAGE)
+    region = umap(HostArrayStore(buf.copy()),
+                  config=UMapConfig(page_size=PAGE, buffer_size=8 * PAGE))
+    with pytest.raises(ValueError):
+        RegionLayerSource(region, specs, pin_fast_layers=[0])
+    uunmap(region)
+
+
+# --------------------------------------------------- checkpoint opt-in
+
+
+def test_checkpointer_tiered_fast_restore():
+    jax = pytest.importorskip("jax")
+    from repro.ckpt.checkpoint import AsyncCheckpointer, restore_tree_from_store
+
+    slow_inner = HostArrayStore(np.zeros(64 * EXTENT, np.uint8))
+    slow = RemoteStore(slow_inner, latency_s=1e-4)
+    ck = AsyncCheckpointer("/tmp/unused_tier_ckpt", store=slow,
+                           tier_fast_bytes=8 * EXTENT)
+    assert isinstance(ck.store, TieredStore)
+    tree = {"w": np.arange(2048, dtype=np.float32),
+            "b": np.ones(256, np.float32)}
+    ck.save_async(1, tree)
+    ck.flush()
+    manifest = ck.store_manifest
+    assert manifest is not None and manifest["step"] == 1
+    # Durability: the image reached the SLOW tier through the flush.
+    assert slow_inner.bytes_written >= 2048 * 4
+    # The fresh image is fast-tier resident (promote_on_write), so the
+    # restore reads host memory, not the remote tier.
+    slow_reads = slow.num_reads
+    out = restore_tree_from_store(ck.store, manifest, tree)
+    assert np.array_equal(out["w"], tree["w"])
+    assert np.array_equal(out["b"], tree["b"])
+    assert slow.num_reads == slow_reads, "restore should hit the fast tier"
+    # Review regression: the promise must survive past the first save —
+    # the writer demotes the target half's stale extents, so save 2 (the
+    # OTHER double-buffer half) promotes too and restores fast as well.
+    tree2 = {"w": tree["w"] * 2, "b": tree["b"] * 3}
+    ck.save_async(2, tree2)
+    ck.flush()
+    manifest2 = ck.store_manifest
+    assert manifest2["step"] == 2 and manifest2["offset"] != manifest["offset"]
+    slow_reads = slow.num_reads
+    out2 = restore_tree_from_store(ck.store, manifest2, tree2)
+    assert np.array_equal(out2["w"], tree2["w"])
+    assert slow.num_reads == slow_reads, \
+        "second save's restore should hit the fast tier too"
+    ck.close()
