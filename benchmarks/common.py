@@ -18,12 +18,19 @@ from __future__ import annotations
 import dataclasses
 import gc
 import json
+import os
 import time
 from pathlib import Path
 from typing import Callable, List, Optional
 
 DATA_DIR = Path("/tmp/repro_bench")
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+# Result-file schema (benchmarks/compare.py and CI's bench-smoke gate key
+# off this).  v1 was a bare JSON list of row dicts; v2 wraps the rows in a
+# versioned envelope so readers can evolve without guessing:
+#   {"schema_version": 2, "suite": "<name>", "rows": [ {...}, ... ]}
+BENCH_SCHEMA_VERSION = 2
 
 KB, MB, GB = 1024, 1024**2, 1024**3
 
@@ -54,11 +61,49 @@ def timeit(fn: Callable[[], None]) -> float:
     return time.perf_counter() - t0
 
 
-def save_rows(name: str, rows: List[Row]) -> Path:
-    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    out = RESULTS_DIR / f"{name}.json"
-    out.write_text(json.dumps([r.as_dict() for r in rows], indent=1))
+def results_dir(out_dir: Optional[Path] = None) -> Path:
+    """Where result JSON lands: explicit arg > UMAP_BENCH_RESULTS_DIR env
+    (the CI fresh-run dir, keeping committed baselines pristine) > the
+    committed experiments/bench/ directory."""
+    if out_dir is not None:
+        return Path(out_dir)
+    env = os.environ.get("UMAP_BENCH_RESULTS_DIR", "").strip()
+    return Path(env) if env else RESULTS_DIR
+
+
+def save_rows(name: str, rows: List[Row],
+              out_dir: Optional[Path] = None) -> Path:
+    dst = results_dir(out_dir)
+    dst.mkdir(parents=True, exist_ok=True)
+    out = dst / f"{name}.json"
+    out.write_text(json.dumps(
+        {"schema_version": BENCH_SCHEMA_VERSION, "suite": name,
+         "rows": [r.as_dict() for r in rows]}, indent=1))
     return out
+
+
+def load_rows(path: Path) -> List[dict]:
+    """Row dicts from a result file; accepts both the v1 bare list and the
+    v2 envelope.  Raises ValueError on anything else (the compare gate
+    turns that into a hard failure, not a silent skip)."""
+    doc = json.loads(Path(path).read_text())
+    if isinstance(doc, list):                      # v1: bare list of rows
+        rows = doc
+    elif isinstance(doc, dict):
+        version = doc.get("schema_version")
+        if version != BENCH_SCHEMA_VERSION:
+            raise ValueError(
+                f"{path}: unsupported bench schema_version {version!r}")
+        rows = doc.get("rows")
+    else:
+        rows = None
+    if not isinstance(rows, list) or not all(isinstance(r, dict) for r in rows):
+        raise ValueError(f"{path}: expected a list of row objects")
+    for i, r in enumerate(rows):
+        for key in ("workload", "config", "page_size", "seconds"):
+            if key not in r:
+                raise ValueError(f"{path}: row {i} missing {key!r}")
+    return rows
 
 
 def speedup_table(rows: List[Row]) -> dict:

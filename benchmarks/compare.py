@@ -1,0 +1,381 @@
+"""Bench regression gate: diff fresh results against committed baselines.
+
+Every numeric metric in every row of a fresh result file is compared to
+the same (workload, config, page_size) row in the committed baseline
+under ``experiments/bench/``, using per-metric noise bands declared in
+``experiments/bench/bench_baselines.toml``.  Exit status is the gate:
+0 = within bands, 1 = at least one out-of-band regression (or a baseline
+row/metric that disappeared), 2 = usage/schema error.
+
+Band semantics (the pure ``judge`` function, property-tested in
+tests/test_bench_compare.py):
+
+  allowed = rel_tol * |baseline| + abs_tol
+  worse   = (fresh - baseline)        when direction == "lower"
+          = (baseline - fresh)        when direction == "higher"
+  regression   iff worse >  allowed
+  improvement  iff worse < -allowed   (never fails the gate)
+  ignore       direction never fails (informational diff only)
+
+Band lookup order for metric ``m`` of suite ``s``:
+``[suite.<s>.<m>]`` > ``[metric.<m>]`` > ``[default]``.
+
+Typical use::
+
+  # CI bench-smoke: run fresh benches into a scratch dir, then gate
+  UMAP_BENCH_RESULTS_DIR=/tmp/fresh python -m benchmarks.bench_fault_storm --smoke
+  python -m benchmarks.compare --fresh /tmp/fresh --smoke --report diff.md
+
+  # after an intentional perf change: refresh the committed baselines
+  python -m benchmarks.compare --fresh /tmp/fresh --update
+
+``--smoke`` gates only the suites present in the fresh directory (a
+partial bench run is not "everything else regressed to missing").
+Without ``--fresh`` the committed baselines are compared to themselves —
+a schema/band-file validity check that must always exit 0.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import shutil
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+try:
+    from .common import RESULTS_DIR, load_rows
+except ImportError:                     # running as a script, not a module
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import RESULTS_DIR, load_rows
+
+DEFAULT_BANDS = RESULTS_DIR / "bench_baselines.toml"
+
+# ----------------------------------------------------------------- TOML
+
+def _parse_toml_value(raw: str):
+    raw = raw.strip()
+    if raw.startswith('"') and raw.endswith('"') and len(raw) >= 2:
+        return raw[1:-1]
+    if raw in ("true", "false"):
+        return raw == "true"
+    try:
+        return int(raw)
+    except ValueError:
+        pass
+    try:
+        return float(raw)
+    except ValueError:
+        raise ValueError(f"unsupported TOML value: {raw!r}")
+
+
+def parse_mini_toml(text: str) -> dict:
+    """Just enough TOML for the bands file (Python 3.10 has no tomllib):
+    ``[a.b.c]`` tables and ``key = value`` pairs with string / int /
+    float / bool values.  Full-line and trailing comments supported for
+    unquoted values."""
+    root: dict = {}
+    table = root
+    for lineno, line in enumerate(text.splitlines(), 1):
+        stripped = line.strip()
+        if not stripped or stripped.startswith("#"):
+            continue
+        if stripped.startswith("["):
+            if not stripped.endswith("]"):
+                raise ValueError(f"line {lineno}: malformed table header")
+            table = root
+            for part in stripped[1:-1].strip().split("."):
+                part = part.strip()
+                if not part:
+                    raise ValueError(f"line {lineno}: empty table name part")
+                table = table.setdefault(part, {})
+                if not isinstance(table, dict):
+                    raise ValueError(f"line {lineno}: {part!r} is not a table")
+            continue
+        if "=" not in stripped:
+            raise ValueError(f"line {lineno}: expected key = value")
+        key, _, raw = stripped.partition("=")
+        raw = raw.strip()
+        if not raw.startswith('"') and "#" in raw:
+            raw = raw.split("#", 1)[0].strip()
+        table[key.strip()] = _parse_toml_value(raw)
+    return root
+
+
+def load_toml(path: Path) -> dict:
+    text = Path(path).read_text()
+    try:
+        import tomllib
+        return tomllib.loads(text)
+    except ModuleNotFoundError:
+        return parse_mini_toml(text)
+
+
+# ----------------------------------------------------------------- bands
+
+DIRECTIONS = ("lower", "higher", "ignore")
+
+
+@dataclasses.dataclass(frozen=True)
+class Band:
+    rel_tol: float = 0.5
+    abs_tol: float = 0.0
+    direction: str = "lower"      # "lower"/"higher" is better, or "ignore"
+
+    def __post_init__(self):
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"direction must be one of {DIRECTIONS}, "
+                             f"got {self.direction!r}")
+        if self.rel_tol < 0 or self.abs_tol < 0:
+            raise ValueError("tolerances must be non-negative")
+
+    def allowed(self, baseline: float) -> float:
+        return self.rel_tol * abs(baseline) + self.abs_tol
+
+
+class BandTable:
+    """Band lookup: [suite.<s>.<m>] > [metric.<m>] > [default]."""
+
+    def __init__(self, doc: dict):
+        self.default = _band_from(doc.get("default", {}), Band())
+        self.by_metric = {m: _band_from(spec, self.default)
+                          for m, spec in doc.get("metric", {}).items()}
+        self.by_suite = {
+            s: {m: _band_from(spec, self.by_metric.get(m, self.default))
+                for m, spec in metrics.items()}
+            for s, metrics in doc.get("suite", {}).items()}
+
+    def lookup(self, suite: str, metric: str) -> Band:
+        b = self.by_suite.get(suite, {}).get(metric)
+        if b is not None:
+            return b
+        return self.by_metric.get(metric, self.default)
+
+
+def _band_from(spec: dict, base: Band) -> Band:
+    unknown = set(spec) - {"rel_tol", "abs_tol", "direction"}
+    if unknown:
+        raise ValueError(f"unknown band keys: {sorted(unknown)}")
+    return Band(rel_tol=float(spec.get("rel_tol", base.rel_tol)),
+                abs_tol=float(spec.get("abs_tol", base.abs_tol)),
+                direction=str(spec.get("direction", base.direction)))
+
+
+# ----------------------------------------------------------------- judge
+
+OK, REGRESSION, IMPROVEMENT = "ok", "regression", "improvement"
+
+
+def judge(baseline: float, fresh: float, band: Band) -> str:
+    """Classify a fresh metric value against its baseline (pure function).
+
+    Within ``allowed = rel_tol*|baseline| + abs_tol`` of the baseline the
+    verdict is ``ok`` in both directions; beyond it, the verdict depends
+    on which way is "better": ``regression`` on the worse side (the only
+    verdict that fails the gate), ``improvement`` on the better side.
+    """
+    if band.direction == "ignore":
+        return OK
+    worse = (fresh - baseline) if band.direction == "lower" \
+        else (baseline - fresh)
+    allowed = band.allowed(baseline)
+    if worse > allowed:
+        return REGRESSION
+    if worse < -allowed:
+        return IMPROVEMENT
+    return OK
+
+
+# ------------------------------------------------------------------ diff
+
+@dataclasses.dataclass
+class Finding:
+    suite: str
+    row_key: Tuple[str, str, int]
+    metric: str
+    baseline: Optional[float]
+    fresh: Optional[float]
+    verdict: str
+    band: Optional[Band] = None
+
+    def describe(self) -> str:
+        wl, cfg, ps = self.row_key
+        loc = f"{self.suite}: {wl}/{cfg}/p{ps} {self.metric}"
+        if self.baseline is None:
+            return f"{loc}: new metric (fresh={self.fresh}) [{self.verdict}]"
+        if self.fresh is None:
+            return f"{loc}: missing from fresh run [{self.verdict}]"
+        pct = ((self.fresh - self.baseline) / self.baseline * 100
+               if self.baseline else float("inf"))
+        return (f"{loc}: {self.baseline:g} -> {self.fresh:g} "
+                f"({pct:+.1f}%) [{self.verdict}]")
+
+
+def _row_key(row: dict) -> Tuple[str, str, int]:
+    return (str(row["workload"]), str(row["config"]), int(row["page_size"]))
+
+
+def _metrics(row: dict) -> Dict[str, float]:
+    out = {}
+    for k, v in row.items():
+        if k in ("workload", "config", "page_size"):
+            continue
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue                      # lists/dicts/strings: not gated
+        out[k] = float(v)
+    return out
+
+
+def compare_suite(suite: str, baseline_rows: List[dict],
+                  fresh_rows: List[dict], bands: BandTable) -> List[Finding]:
+    findings: List[Finding] = []
+    fresh_by_key = {_row_key(r): r for r in fresh_rows}
+    for brow in baseline_rows:
+        key = _row_key(brow)
+        frow = fresh_by_key.pop(key, None)
+        bm = _metrics(brow)
+        if frow is None:
+            findings.append(Finding(suite, key, "<row>", None, None,
+                                    REGRESSION))
+            continue
+        fm = _metrics(frow)
+        for metric, bval in sorted(bm.items()):
+            band = bands.lookup(suite, metric)
+            if metric not in fm:
+                verdict = OK if band.direction == "ignore" else REGRESSION
+                findings.append(Finding(suite, key, metric, bval, None,
+                                        verdict, band))
+                continue
+            findings.append(Finding(suite, key, metric, bval, fm[metric],
+                                    judge(bval, fm[metric], band), band))
+        for metric in sorted(set(fm) - set(bm)):
+            findings.append(Finding(suite, key, metric, None, fm[metric], OK,
+                                    bands.lookup(suite, metric)))
+    for key, frow in sorted(fresh_by_key.items()):
+        findings.append(Finding(suite, key, "<row>", None, None, OK))
+    return findings
+
+
+# ----------------------------------------------------------------- report
+
+def render_report(findings: List[Finding], suites: List[str]) -> str:
+    regressions = [f for f in findings if f.verdict == REGRESSION]
+    improvements = [f for f in findings if f.verdict == IMPROVEMENT]
+    lines = ["# Bench comparison report", "",
+             f"Suites compared: {', '.join(suites) or '(none)'}",
+             f"Metrics compared: {len(findings)}",
+             f"Regressions: {len(regressions)}  "
+             f"Improvements: {len(improvements)}", ""]
+    if regressions:
+        lines += ["## Regressions (gate FAILED)", ""]
+        lines += [f"- {f.describe()}" for f in regressions] + [""]
+    if improvements:
+        lines += ["## Improvements", ""]
+        lines += [f"- {f.describe()}" for f in improvements] + [""]
+    lines += ["## All diffs", ""]
+    lines += [f"- {f.describe()}" for f in findings
+              if f.fresh is None or f.baseline is None
+              or f.fresh != f.baseline]
+    return "\n".join(lines) + "\n"
+
+
+# -------------------------------------------------------------------- CLI
+
+def _suite_files(directory: Path) -> Dict[str, Path]:
+    return {p.stem: p for p in sorted(Path(directory).glob("*.json"))}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff fresh bench JSON against committed baselines")
+    ap.add_argument("--fresh", default=None, metavar="DIR",
+                    help="directory of fresh result JSON "
+                         "(default: the baseline dir — self-compare)")
+    ap.add_argument("--baseline", default=str(RESULTS_DIR), metavar="DIR")
+    ap.add_argument("--bands", default=str(DEFAULT_BANDS), metavar="FILE")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated subset to gate")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate only suites present in the fresh directory")
+    ap.add_argument("--report", default=None, metavar="FILE",
+                    help="write a markdown diff report here")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh results over the baselines "
+                         "(after an intentional perf change)")
+    args = ap.parse_args(argv)
+
+    baseline_dir = Path(args.baseline)
+    fresh_dir = Path(args.fresh) if args.fresh else baseline_dir
+    try:
+        bands = BandTable(load_toml(Path(args.bands)))
+    except (OSError, ValueError) as e:
+        print(f"compare: bad bands file {args.bands}: {e}", file=sys.stderr)
+        return 2
+
+    base_files = _suite_files(baseline_dir)
+    base_files.pop("bench_baselines", None)
+    fresh_files = _suite_files(fresh_dir)
+    suites = sorted(base_files)
+    if args.smoke:
+        suites = [s for s in suites if s in fresh_files]
+    if args.suites:
+        wanted = [s.strip() for s in args.suites.split(",") if s.strip()]
+        unknown = sorted(set(wanted) - set(base_files))
+        if unknown:
+            print(f"compare: unknown suites {unknown} "
+                  f"(have: {sorted(base_files)})", file=sys.stderr)
+            return 2
+        suites = [s for s in suites if s in wanted]
+
+    findings: List[Finding] = []
+    for suite in suites:
+        try:
+            brows = load_rows(base_files[suite])
+        except ValueError as e:
+            print(f"compare: bad baseline: {e}", file=sys.stderr)
+            return 2
+        fpath = fresh_files.get(suite)
+        if fpath is None:
+            print(f"compare: {suite}: no fresh results -> REGRESSION",
+                  file=sys.stderr)
+            findings.append(Finding(suite, (suite, "*", 0), "<suite>",
+                                    None, None, REGRESSION))
+            continue
+        try:
+            frows = load_rows(fpath)
+        except ValueError as e:
+            print(f"compare: bad fresh results: {e}", file=sys.stderr)
+            return 2
+        findings.extend(compare_suite(suite, brows, frows, bands))
+
+    regressions = [f for f in findings if f.verdict == REGRESSION]
+    improvements = [f for f in findings if f.verdict == IMPROVEMENT]
+    for f in regressions:
+        print(f"REGRESSION  {f.describe()}")
+    for f in improvements:
+        print(f"improvement {f.describe()}")
+    print(f"compare: {len(suites)} suites, {len(findings)} metrics, "
+          f"{len(regressions)} regressions, "
+          f"{len(improvements)} improvements")
+
+    if args.report:
+        Path(args.report).write_text(render_report(findings, suites))
+        print(f"compare: report written to {args.report}")
+
+    if args.update:
+        if fresh_dir == baseline_dir:
+            print("compare: --update needs --fresh", file=sys.stderr)
+            return 2
+        for suite in suites:
+            if suite in fresh_files:
+                shutil.copyfile(fresh_files[suite], base_files.get(
+                    suite, baseline_dir / f"{suite}.json"))
+                print(f"compare: baseline updated: {suite}")
+        return 0
+
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

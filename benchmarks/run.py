@@ -89,9 +89,13 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true", help="paper-scale datasets")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite subset")
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="write result JSON here instead of the committed "
+                         "experiments/bench/ (also: UMAP_BENCH_RESULTS_DIR)")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
+    out_dir = args.out
 
     from .common import print_rows, save_rows, speedup_table
 
@@ -103,7 +107,7 @@ def main(argv=None) -> int:
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             rows = mod.run(quick=quick)
-            save_rows(name, rows)
+            save_rows(name, rows, out_dir=out_dir)
             for r in rows:
                 us = r.seconds * 1e6
                 derived = ";".join(f"{k}={v}" for k, v in r.extra.items())
@@ -140,7 +144,7 @@ def main(argv=None) -> int:
 
     if only is None or "fault_overhead" in (only or set()):
         rows = _fault_overhead_rows()
-        save_rows("fault_overhead", rows)
+        save_rows("fault_overhead", rows, out_dir=out_dir)
         for r in rows:
             derived = ";".join(f"{k}={v if isinstance(v, int) else f'{v:.1f}'}"
                                for k, v in r.extra.items())

@@ -28,6 +28,17 @@ Extensions beyond the paper's list (this repo's adaptive engine, DESIGN.md ยง8โ
   UMAP_TIER_PROMOTE_HEAT              heat threshold for promotion (default 2.0)
   UMAP_TIER_MAX_MIGRATIONS            max promote/demote pairs per cycle (default 8)
 
+Process-level controls read outside UMapConfig (not config fields):
+
+  UMAP_TELEMETRY_PORT                 start the process-wide Prometheus exporter on
+                                      this port; every PagingService self-registers
+                                      its collectors (default unset = telemetry off;
+                                      read by repro.telemetry, DESIGN.md ยง15)
+  UMAP_TELEMETRY_HOST                 exporter bind address (default 127.0.0.1)
+  UMAP_BENCH_RESULTS_DIR              where benchmark runs write result JSON
+                                      (default experiments/bench/; read by
+                                      benchmarks.common)
+
 Programmatic control mirrors the paper's ``umapcfg_set_xx`` interfaces:
 construct :class:`UMapConfig` directly or call :func:`from_env`.
 """

@@ -80,6 +80,7 @@ flush, no coalescing, no adaptation) and is the paper's comparison baseline.
 from __future__ import annotations
 
 import contextlib
+import os
 import queue
 import threading
 import time
@@ -167,6 +168,27 @@ class ServiceStats:
     per_shard: List[dict] = field(default_factory=list)
 
     def snapshot(self) -> dict:
+        """Plain-dict copy of the stats — the stable telemetry schema.
+
+        **Consistency contract (by design):** the snapshot is NOT a
+        consistent point-in-time cut across shards.  ``PagingService.stats``
+        aggregates per-shard counters *lock-free* (individual int reads are
+        GIL-consistent, but shard 3 may be read microseconds after shard 0,
+        with fills landing in between), precisely so that reading stats —
+        including a telemetry scrape — can never block a fill, an eviction,
+        or a faulting application thread.  Consequences callers may rely on:
+
+        * every individual counter value was true at some instant and is
+          monotonically non-decreasing across snapshots (counter semantics);
+        * cross-counter invariants (e.g. ``demand_faults`` vs. the sum of
+          ``per_shard`` faults) hold exactly only once the service is
+          quiescent — under load they can be transiently off by in-flight
+          operations;
+        * the key set IS stable: every ``_SHARD_COUNTERS`` key appears both
+          at top level and in each ``per_shard`` dict, and every
+          ``_SERVICE_COUNTERS`` key at top level (pinned by the
+          stats-key-parity tests in tests/test_sharded_pager.py).
+        """
         d = {k: v for k, v in self.__dict__.items()
              if k not in ("per_filler_fills", "per_shard")}
         d["per_filler_fills"] = dict(self.per_filler_fills)
@@ -238,6 +260,11 @@ class PagingService:
         self._next_region_id = 0
         self._closed = False
 
+        # Telemetry opt-in state (DESIGN.md §15): None until
+        # register_telemetry() runs — zero overhead when unused.  Holds
+        # (registry, label, registered-names, seen-tiered-store-ids).
+        self._telemetry: Optional[tuple] = None
+
         # Read path: per-filler deques + work stealing, each deque guarded by
         # its OWN condition — there is no global queue lock (a shared one
         # re-centralizes contention as a steal ping-pong convoy the moment
@@ -289,6 +316,19 @@ class PagingService:
         # posts flush batches to the cleaner queue (paper §3.5).
         self.watermark = WatermarkMonitor(self)
         self.watermark.start()
+
+        # Env-driven observability (DESIGN.md §15): with
+        # UMAP_TELEMETRY_PORT set, every service self-registers with the
+        # process-wide registry and the shared Prometheus exporter starts
+        # on first use.  Unset (default): one dict lookup, nothing else —
+        # telemetry failures must never take down the pager.
+        if os.environ.get("UMAP_TELEMETRY_PORT", "").strip() not in ("", "0"):
+            try:
+                from .. import telemetry as _telemetry
+                _telemetry.start_from_env()
+                self.register_telemetry()
+            except Exception:        # pragma: no cover - defensive only
+                pass
 
     # ----------------------------------------------------------- sharding
 
@@ -342,6 +382,65 @@ class PagingService:
         agg.per_shard = [dict(s.counters) for s in self.shards]
         return agg
 
+    # ------------------------------------------------------- telemetry hook
+
+    _svc_seq = 0          # class-level: default telemetry label uniquifier
+
+    def register_telemetry(self, registry=None, label: Optional[str] = None
+                           ) -> List[str]:
+        """Opt this service into the telemetry registry (DESIGN.md §15).
+
+        Registers a pager collector and a lease collector over this
+        service's lock-free stats path; tiered regions registered now or
+        later additionally get a tiering collector for their store.  The
+        collectors are removed again in :meth:`close`.  Returns the
+        registry names.  Idempotent; zero overhead when never called —
+        collectors sample only when scraped.
+        """
+        from ..telemetry import default_registry
+        from ..telemetry.collectors import LeaseCollector, PagerCollector
+        with self.lock:
+            if self._telemetry is not None:
+                return list(self._telemetry[2])
+            reg = registry if registry is not None else default_registry()
+            if label is None:
+                label = f"svc{PagingService._svc_seq}"
+                PagingService._svc_seq += 1
+            names = [
+                reg.register(PagerCollector(self, label=label)),
+                reg.register(LeaseCollector(service=self, label=label)),
+            ]
+            self._telemetry = (reg, label, names, set())
+            regions = list(self._regions.items())
+        for rid, region in regions:  # tiered regions registered before opt-in
+            self._register_tier_collector(region, rid)
+        return names
+
+    def _register_tier_collector(self, region: "UMapRegion",
+                                 rid: int) -> None:
+        """Add a tiering collector for a tiered region's store (once per
+        distinct store object; no-op unless telemetry is enabled)."""
+        if self._telemetry is None or not getattr(region, "tiered", False):
+            return
+        from ..telemetry.collectors import TieringCollector
+        with self.lock:
+            if self._telemetry is None:
+                return
+            reg, label, names, seen_stores = self._telemetry
+            if id(region.store) in seen_stores:
+                return
+            seen_stores.add(id(region.store))
+            names.append(reg.register(TieringCollector(
+                region.store, label=f"{label}/r{rid}")))
+
+    def unregister_telemetry(self) -> None:
+        with self.lock:
+            tele, self._telemetry = self._telemetry, None
+        if tele is not None:
+            reg, _, names, _ = tele
+            for name in names:
+                reg.unregister(name)
+
     # ------------------------------------------------------------------ API
 
     def register(self, region: "UMapRegion") -> int:
@@ -363,7 +462,8 @@ class PagingService:
                                      name="umap-tier-migrator", daemon=True)
                 self._tier_thread = t
                 t.start()
-            return rid
+        self._register_tier_collector(region, rid)
+        return rid
 
     def unregister(self, region: "UMapRegion") -> None:
         # Closing gate FIRST: new faults raise, queued fills are abandoned by
@@ -409,6 +509,7 @@ class PagingService:
             self._tier_thread.join(timeout=5.0)
         for t in self._fillers + self._evictors:
             t.join(timeout=5.0)
+        self.unregister_telemetry()
         if quarantine_err is not None:
             raise quarantine_err
 

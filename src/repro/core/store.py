@@ -673,8 +673,18 @@ class TieredStore(BackingStore):
         with self._lock:
             return sorted(self._slot)
 
-    def tier_stats(self) -> dict:
-        with self._lock:
+    def tier_stats(self, relaxed: bool = False) -> dict:
+        """Residency + migration counters.
+
+        ``relaxed=True`` skips ``self._lock``: each value is a single
+        GIL-atomic read (``len()`` of a container or an int attribute), so
+        every number was true at some instant, but the set is not a
+        consistent cut — e.g. ``resident_extents`` and ``free_fast_slots``
+        may transiently not sum to ``num_fast_slots`` mid-migration.  This
+        is the telemetry scrape path (DESIGN.md §15.3): scrapes must never
+        contend with promotion/demotion or the I/O planner for the lock.
+        """
+        if relaxed:
             return {
                 "resident_extents": len(self._slot),
                 "free_fast_slots": len(self._free),
@@ -686,6 +696,22 @@ class TieredStore(BackingStore):
                 "fast_bytes_read": self.fast_bytes_read,
                 "slow_bytes_read": self.slow_bytes_read,
             }
+        with self._lock:
+            return self.tier_stats(relaxed=True)
+
+    def register_telemetry(self, registry=None,
+                           label: Optional[str] = None) -> str:
+        """Opt this store into the telemetry registry (DESIGN.md §15).
+
+        Returns the registry name of the new tiering collector.  Note that
+        ``PagingService.register_telemetry`` already auto-registers one
+        collector per distinct tiered store it manages; this hook is for
+        stores used directly (no service) or with a non-default registry.
+        """
+        from ..telemetry import default_registry
+        from ..telemetry.collectors import TieringCollector
+        reg = registry if registry is not None else default_registry()
+        return reg.register(TieringCollector(self, label=label))
 
     # ------------------------------------------------------- segment routing
 

@@ -83,6 +83,18 @@ class ServeEngine:
         self._caches = self._init_caches()
         self._decode = jax.jit(partial(T.decode_step, cfg))
 
+    def register_telemetry(self, registry=None, label=None) -> str:
+        """Opt this engine into the telemetry registry (DESIGN.md §15).
+
+        Returns the registry name of the serve collector.  The collector
+        reads the engine's plain-dict counters and queue lengths only —
+        no engine lock exists, and a scrape never touches device state.
+        """
+        from ..telemetry import default_registry
+        from ..telemetry.collectors import ServeCollector
+        reg = registry if registry is not None else default_registry()
+        return reg.register(ServeCollector(engine=self, label=label))
+
     # --------------------------------------------------------------- caches
 
     def _init_caches(self) -> list:

@@ -146,6 +146,15 @@ class RegionLayerSource:
     def __len__(self) -> int:
         return len(self.specs)
 
+    def register_telemetry(self, registry=None, label=None) -> str:
+        """Opt this source into the telemetry registry (DESIGN.md §15):
+        a lease collector exposing the staging-copy counter (nonzero only
+        on the copy-backed fallback path).  Returns the registry name."""
+        from ..telemetry import default_registry
+        from ..telemetry.collectors import LeaseCollector
+        reg = registry if registry is not None else default_registry()
+        return reg.register(LeaseCollector(weight_source=self, label=label))
+
     def _take_slots(self, n: int) -> List[int]:
         """Pop ``n`` pool slots, evicting oldest layers (lock held)."""
         while len(self._free) < n:
@@ -249,6 +258,19 @@ class LayerWeightPager:
         ]
         for t in self._fillers:
             t.start()
+
+    def register_telemetry(self, registry=None, label=None) -> str:
+        """Opt this pager into the telemetry registry (DESIGN.md §15).
+
+        Returns the registry name of the serve collector.  The collector
+        reads the plain-dict ``stats`` counters without ``_lock`` —
+        GIL-atomic int reads, same relaxed contract as the core pager's
+        snapshot — so a scrape never contends with fills or evictions.
+        """
+        from ..telemetry import default_registry
+        from ..telemetry.collectors import ServeCollector
+        reg = registry if registry is not None else default_registry()
+        return reg.register(ServeCollector(weight_pager=self, label=label))
 
     # ------------------------------------------------------------- pager
 

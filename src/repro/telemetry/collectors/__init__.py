@@ -1,0 +1,23 @@
+"""Modular metric collectors (DESIGN.md §15.1).
+
+One small collector per subsystem, each with its own test class
+(tests/test_telemetry.py) — the omnistat shape.  Collectors duck-type
+their sources, so this package has no imports from ``repro.core`` /
+``repro.serve`` and the core can lazy-import telemetry cycle-free.
+"""
+
+from .base import Collector
+from .leases import LeaseCollector
+from .pager import PagerCollector
+from .process import ProcessCollector
+from .serve import ServeCollector
+from .tiering import TieringCollector
+
+__all__ = [
+    "Collector",
+    "LeaseCollector",
+    "PagerCollector",
+    "ProcessCollector",
+    "ServeCollector",
+    "TieringCollector",
+]

@@ -1,0 +1,106 @@
+"""Serve collector: serving-engine, paged-KV-cache, and weight-pager
+counters.
+
+All three sources are optional (duck-typed):
+
+  engine        a ``ServeEngine`` — its ``stats`` dict plus admission/
+                occupancy gauges read from plain attributes (the engine
+                loop is single-threaded; reads are GIL-atomic)
+  kv            a ``PagedKVCache`` — pool occupancy + host-lock telemetry
+  weight_pager  a ``LayerWeightPager`` — layer fill/hit/steal counters
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..metrics import MetricFamily
+from .base import Collector
+
+_ENGINE_COUNTERS = (
+    ("steps", "umap_serve_steps_total", "Decode iterations executed"),
+    ("prefills", "umap_serve_prefills_total", "Requests prefilled into the pool"),
+    ("evictions", "umap_serve_evictions_total",
+     "Sequences evicted (uunmap analogue)"),
+    ("requeues", "umap_serve_requeues_total",
+     "Evicted requests re-queued for restart"),
+    ("admission_pauses", "umap_serve_admission_pauses_total",
+     "High-watermark admission pauses"),
+)
+
+_KV_GAUGES = (
+    ("pages_used", "umap_kv_pages_used", "Device pool pages in use"),
+    ("pages_free", "umap_kv_pages_free", "Device pool pages free"),
+    ("occupancy", "umap_kv_occupancy_ratio", "Device pool occupancy [0,1]"),
+    ("sequences", "umap_kv_sequences", "Live sequences in the cache"),
+    ("page_bytes", "umap_kv_page_size_bytes", "Bytes per KV page (K+V)"),
+)
+
+_WEIGHT_COUNTERS = (
+    ("fills", "umap_weight_fills_total", "Layers fetched host-to-device"),
+    ("hits", "umap_weight_hits_total", "Layer requests served from a slot"),
+    ("waits", "umap_weight_waits_total",
+     "Layer requests that waited on an in-flight fetch"),
+    ("evictions", "umap_weight_evictions_total",
+     "Layers dropped from the device slot ring"),
+    ("pattern_transitions", "umap_weight_pattern_transitions_total",
+     "Adaptive readahead retunes"),
+    ("steals", "umap_weight_steals_total",
+     "Weight-pager filler work-steal events"),
+)
+
+
+class ServeCollector(Collector):
+    kind = "serve"
+
+    def __init__(self, engine=None, kv=None, weight_pager=None, label=None):
+        super().__init__(label)
+        self.engine = engine
+        self.kv = kv
+        self.weight_pager = weight_pager
+
+    def collect(self) -> List[MetricFamily]:
+        fams: List[MetricFamily] = []
+        if self.engine is not None:
+            eng = self.engine
+            st = dict(eng.stats)
+            fams += [self.c1(m, h, st.get(k, 0))
+                     for k, m, h in _ENGINE_COUNTERS]
+            fams += [
+                self.g1("umap_serve_active_requests",
+                        "Requests currently decoding", len(eng.active)),
+                self.g1("umap_serve_waiting_requests",
+                        "Requests queued for admission", len(eng.waiting)),
+                self.c1("umap_serve_finished_requests_total",
+                        "Requests retired", len(eng.finished)),
+                self.g1("umap_serve_pool_occupancy_ratio",
+                        "KV page-pool occupancy [0,1]",
+                        eng.allocator.occupancy()),
+            ]
+        if self.kv is not None:
+            st = self.kv.stats()
+            fams += [self.g1(m, h, st[k]) for k, m, h in _KV_GAUGES]
+            fams += [
+                self.c1("umap_kv_auto_evicted_pages_total",
+                        "Window-prefix pages auto-evicted", st["auto_evicted_pages"]),
+                self.c1("umap_kv_host_lock_contended_total",
+                        "Contended KV host-metadata lock acquisitions",
+                        st["host_lock_contended"]),
+            ]
+            phases = self.gauge(
+                "umap_kv_sequences_by_phase",
+                "Live sequences per detected access-pattern phase")
+            counts: dict = {}
+            for phase in st["phases"].values():
+                counts[phase] = counts.get(phase, 0) + 1
+            for phase, n in sorted(counts.items()):
+                phases.add(n, phase=phase)
+            fams.append(phases)
+        if self.weight_pager is not None:
+            wp = self.weight_pager
+            st = dict(wp.stats)
+            fams += [self.c1(m, h, st.get(k, 0))
+                     for k, m, h in _WEIGHT_COUNTERS]
+            fams.append(self.g1("umap_weight_slots",
+                                "Device slot-ring capacity", wp.num_slots))
+        return fams

@@ -1,0 +1,60 @@
+"""Tiering collector: one ``TieredStore``'s residency + migration counters.
+
+Samples ``store.tier_stats(relaxed=True)`` — the relaxed mode reads the
+store's counters and map sizes without taking its routing lock, so a
+scrape cannot queue behind an in-flight promote/demote staging copy
+(DESIGN.md §15.3).  The values are individually GIL-consistent but not a
+consistent cross-field cut, same contract as ``ServiceStats.snapshot()``.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..metrics import MetricFamily
+from .base import Collector
+
+_GAUGES = (
+    ("resident_extents", "umap_tier_resident_extents",
+     "Extents currently resident in the fast tier"),
+    ("free_fast_slots", "umap_tier_free_fast_slots",
+     "Unoccupied fast-tier extent slots"),
+    ("dirty_extents", "umap_tier_dirty_extents",
+     "Resident extents newer in fast than slow"),
+    ("pinned_fast", "umap_tier_pinned_fast_extents",
+     "Extents pinned to the fast tier by application hint"),
+)
+
+_COUNTERS = (
+    ("promotions", "umap_tier_promotions_total",
+     "Extents copied into the fast tier"),
+    ("demotions", "umap_tier_demotions_total",
+     "Extents copied out of the fast tier"),
+    ("migration_aborts", "umap_tier_migration_aborts_total",
+     "Promote/demote transactions aborted by a racing write/pin"),
+    ("fast_bytes_read", "umap_tier_fast_read_bytes_total",
+     "Bytes served by the fast tier"),
+    ("slow_bytes_read", "umap_tier_slow_read_bytes_total",
+     "Bytes served by the slow tier"),
+)
+
+
+class TieringCollector(Collector):
+    kind = "tiering"
+
+    def __init__(self, store, label=None):
+        super().__init__(label)
+        self.store = store
+
+    def collect(self) -> List[MetricFamily]:
+        st = self.store
+        stats = st.tier_stats(relaxed=True)
+        fams = [self.g1(m, h, stats[k]) for k, m, h in _GAUGES]
+        fams += [self.c1(m, h, stats[k]) for k, m, h in _COUNTERS]
+        fams += [
+            self.g1("umap_tier_fast_slots",
+                    "Total fast-tier extent slots", st.num_fast_slots),
+            self.g1("umap_tier_extent_size_bytes",
+                    "Migration extent size", st.extent_size),
+        ]
+        return fams

@@ -1,0 +1,395 @@
+"""Bench regression gate (benchmarks/compare.py): noise-band judging
+(property-tested with hypothesis when available), the mini-TOML bands
+parser, v1/v2 result-file loading, golden-file schema validation for
+every committed ``experiments/bench/*.json``, and the CLI end-to-end
+(self-compare passes; injected out-of-band regression fails; improvement
+never fails; vanished rows/metrics fail).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import (  # noqa: E402
+    BENCH_SCHEMA_VERSION,
+    RESULTS_DIR,
+    Row,
+    load_rows,
+    save_rows,
+)
+from benchmarks.compare import (  # noqa: E402
+    IMPROVEMENT,
+    OK,
+    REGRESSION,
+    Band,
+    BandTable,
+    DEFAULT_BANDS,
+    compare_suite,
+    judge,
+    load_toml,
+    main as compare_main,
+    parse_mini_toml,
+)
+
+
+# ------------------------------------------------------------- judge (unit)
+
+
+class TestJudge:
+    def test_identical_is_ok(self):
+        assert judge(100.0, 100.0, Band(0.1, 0.0, "lower")) == OK
+
+    def test_within_band_both_directions(self):
+        band = Band(0.2, 0.0, "lower")
+        assert judge(100.0, 119.0, band) == OK
+        assert judge(100.0, 81.0, band) == OK
+
+    def test_regression_beyond_band_lower_is_better(self):
+        assert judge(100.0, 121.0, Band(0.2, 0.0, "lower")) == REGRESSION
+
+    def test_regression_beyond_band_higher_is_better(self):
+        assert judge(100.0, 79.0, Band(0.2, 0.0, "higher")) == REGRESSION
+
+    def test_improvement_never_fails(self):
+        assert judge(100.0, 50.0, Band(0.2, 0.0, "lower")) == IMPROVEMENT
+        assert judge(100.0, 150.0, Band(0.2, 0.0, "higher")) == IMPROVEMENT
+
+    def test_ignore_direction_never_gates(self):
+        band = Band(0.0, 0.0, "ignore")
+        assert judge(100.0, 1e9, band) == OK
+        assert judge(100.0, -1e9, band) == OK
+
+    def test_abs_tol_covers_zero_baseline(self):
+        assert judge(0.0, 1.0, Band(0.5, 2.0, "lower")) == OK
+        assert judge(0.0, 3.0, Band(0.5, 2.0, "lower")) == REGRESSION
+
+    def test_zero_baseline_zero_tol_any_increase_regresses(self):
+        # the io_errors band: baseline 0, rel 0, abs 0
+        band = Band(0.0, 0.0, "lower")
+        assert judge(0.0, 0.0, band) == OK
+        assert judge(0.0, 1.0, band) == REGRESSION
+
+    def test_band_validation(self):
+        with pytest.raises(ValueError):
+            Band(direction="sideways")
+        with pytest.raises(ValueError):
+            Band(rel_tol=-0.1)
+
+
+class TestJudgeProperties:
+    """Hypothesis property tests for the noise-band logic (satellite):
+    within the band there is never a false regression, beyond it the gate
+    always fires, and an improvement never fails."""
+
+    def test_properties(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        finite = st.floats(min_value=-1e9, max_value=1e9,
+                           allow_nan=False, allow_infinity=False)
+        tols = st.floats(min_value=0.0, max_value=10.0,
+                         allow_nan=False, allow_infinity=False)
+        directions = st.sampled_from(["lower", "higher"])
+
+        @settings(max_examples=300, deadline=None)
+        @given(baseline=finite, fresh=finite, rel=tols, abs_=tols,
+               direction=directions)
+        def prop(baseline, fresh, rel, abs_, direction):
+            band = Band(rel, abs_, direction)
+            verdict = judge(baseline, fresh, band)
+            allowed = rel * abs(baseline) + abs_
+            worse = (fresh - baseline) if direction == "lower" \
+                else (baseline - fresh)
+            if abs(fresh - baseline) <= allowed:
+                # no false regression within the band — either direction
+                assert verdict == OK
+            elif worse > allowed:
+                assert verdict == REGRESSION
+            else:
+                assert verdict == IMPROVEMENT
+            # an improvement (better-direction move) never fails the gate
+            if (direction == "lower" and fresh <= baseline) or \
+                    (direction == "higher" and fresh >= baseline):
+                assert verdict != REGRESSION
+            # ignore never gates, whatever the values
+            assert judge(baseline, fresh,
+                         Band(rel, abs_, "ignore")) == OK
+
+        prop()
+
+
+# -------------------------------------------------------------- mini-TOML
+
+
+class TestMiniToml:
+    def test_tables_and_scalar_types(self):
+        doc = parse_mini_toml(
+            '# comment\n'
+            '[default]\n'
+            'rel_tol = 0.5\n'
+            'abs_tol = 2\n'
+            'direction = "lower"  \n'
+            'flag = true\n'
+            '\n'
+            '[suite.fault_overhead.store_reads]\n'
+            'rel_tol = 0.15   # trailing comment\n')
+        assert doc["default"] == {"rel_tol": 0.5, "abs_tol": 2,
+                                  "direction": "lower", "flag": True}
+        assert doc["suite"]["fault_overhead"]["store_reads"] == \
+            {"rel_tol": 0.15}
+
+    def test_malformed_lines_raise(self):
+        for bad in ("[unclosed\n", "no_equals_here\n", "k = unquoted str\n"):
+            with pytest.raises(ValueError):
+                parse_mini_toml(bad)
+
+    def test_matches_tomllib_when_available(self):
+        text = DEFAULT_BANDS.read_text()
+        try:
+            import tomllib
+        except ModuleNotFoundError:
+            pytest.skip("no tomllib on this interpreter")
+        assert parse_mini_toml(text) == tomllib.loads(text)
+
+
+class TestBandTable:
+    def test_lookup_precedence(self):
+        table = BandTable({
+            "default": {"rel_tol": 0.5, "direction": "lower"},
+            "metric": {"seconds": {"rel_tol": 0.3}},
+            "suite": {"sort": {"seconds": {"rel_tol": 0.1}}},
+        })
+        assert table.lookup("sort", "seconds").rel_tol == 0.1
+        assert table.lookup("bfs", "seconds").rel_tol == 0.3
+        assert table.lookup("bfs", "unknown_metric").rel_tol == 0.5
+        # metric-level entries inherit unset fields from the default
+        assert table.lookup("bfs", "seconds").direction == "lower"
+
+    def test_unknown_band_keys_rejected(self):
+        with pytest.raises(ValueError):
+            BandTable({"metric": {"seconds": {"typo_tol": 1.0}}})
+
+
+# ------------------------------------------------------------ result files
+
+
+class TestLoadRows:
+    def test_v2_roundtrip(self, tmp_path):
+        rows = [Row("w", "umap", 4096, 1.5, {"store_reads": 10})]
+        path = save_rows("suite_x", rows, out_dir=tmp_path)
+        doc = json.loads(path.read_text())
+        assert doc["schema_version"] == BENCH_SCHEMA_VERSION
+        assert doc["suite"] == "suite_x"
+        loaded = load_rows(path)
+        assert loaded == [{"workload": "w", "config": "umap",
+                           "page_size": 4096, "seconds": 1.5,
+                           "store_reads": 10}]
+
+    def test_v1_bare_list_accepted(self, tmp_path):
+        p = tmp_path / "old.json"
+        p.write_text(json.dumps([{"workload": "w", "config": "c",
+                                  "page_size": 1, "seconds": 0.5}]))
+        assert load_rows(p)[0]["config"] == "c"
+
+    def test_bad_version_and_shape_rejected(self, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps({"schema_version": 99, "rows": []}))
+        with pytest.raises(ValueError, match="schema_version"):
+            load_rows(p)
+        p.write_text(json.dumps({"schema_version": 2, "rows": "nope"}))
+        with pytest.raises(ValueError, match="list of row"):
+            load_rows(p)
+        p.write_text(json.dumps([{"workload": "w"}]))
+        with pytest.raises(ValueError, match="missing"):
+            load_rows(p)
+
+    def test_env_var_redirects_results_dir(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("UMAP_BENCH_RESULTS_DIR", str(tmp_path))
+        out = save_rows("redirected", [Row("w", "c", 1, 0.1)])
+        assert out.parent == tmp_path
+
+
+class TestCommittedGoldenFiles:
+    """Golden-file schema validation for every committed baseline."""
+
+    def _suites(self):
+        return sorted(p for p in RESULTS_DIR.glob("*.json"))
+
+    def test_five_baselines_committed(self):
+        assert {p.stem for p in self._suites()} == {
+            "fault_overhead", "fault_storm", "sort", "tiering", "writeback"}
+
+    def test_all_baselines_are_v2_and_loadable(self):
+        for path in self._suites():
+            doc = json.loads(path.read_text())
+            assert doc["schema_version"] == BENCH_SCHEMA_VERSION, path
+            assert doc["suite"] == path.stem, path
+            rows = load_rows(path)
+            assert rows, f"{path} has no rows"
+            for row in rows:
+                assert isinstance(row["seconds"], (int, float)), path
+
+    def test_bands_file_parses_and_covers_headline_metrics(self):
+        table = BandTable(load_toml(DEFAULT_BANDS))
+        assert table.lookup("fault_overhead", "store_reads").rel_tol <= 0.15
+        assert table.lookup("fault_storm", "best_speedup").direction == "higher"
+        assert table.lookup("tiering", "io_errors").abs_tol == 0.0
+        assert table.lookup("fault_storm", "lock_contended").direction == "ignore"
+
+    def test_self_compare_of_committed_baselines_passes(self, capsys):
+        assert compare_main([]) == 0
+        assert "0 regressions" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------- gate e2e
+
+
+def _copy_baselines(dst: Path) -> None:
+    dst.mkdir(parents=True, exist_ok=True)
+    for p in RESULTS_DIR.glob("*.json"):
+        (dst / p.name).write_text(p.read_text())
+
+
+def _bump(dirpath: Path, suite: str, config: str, metric: str, factor: float):
+    p = dirpath / f"{suite}.json"
+    doc = json.loads(p.read_text())
+    hit = False
+    for row in doc["rows"]:
+        if row["config"] == config and metric in row:
+            row[metric] = type(row[metric])(row[metric] * factor)
+            hit = True
+    assert hit, f"no row {config} with {metric} in {suite}"
+    p.write_text(json.dumps(doc))
+
+
+class TestCompareCLI:
+    def test_injected_20pct_regression_fails(self, tmp_path, capsys):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        _bump(fresh, "fault_overhead", "batch-on", "store_reads", 1.2)
+        rc = compare_main(["--fresh", str(fresh)])
+        assert rc == 1
+        assert "REGRESSION" in capsys.readouterr().out
+
+    def test_improvement_passes(self, tmp_path, capsys):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        _bump(fresh, "fault_overhead", "batch-on", "store_reads", 0.5)
+        assert compare_main(["--fresh", str(fresh)]) == 0
+        assert "improvement" in capsys.readouterr().out
+
+    def test_ignored_metric_noise_passes(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        _bump(fresh, "fault_storm", "shards8", "lock_contended", 50.0)
+        assert compare_main(["--fresh", str(fresh)]) == 0
+
+    def test_missing_row_fails(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        p = fresh / "writeback.json"
+        doc = json.loads(p.read_text())
+        doc["rows"] = [r for r in doc["rows"] if r["config"] != "batched"]
+        p.write_text(json.dumps(doc))
+        assert compare_main(["--fresh", str(fresh)]) == 1
+
+    def test_missing_metric_fails_unless_ignored(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        p = fresh / "tiering.json"
+        doc = json.loads(p.read_text())
+        for r in doc["rows"]:
+            r.pop("slow_store_reads", None)    # gated metric vanished
+            r.pop("lock_contended", None)      # (not present anyway)
+        p.write_text(json.dumps(doc))
+        assert compare_main(["--fresh", str(fresh)]) == 1
+
+    def test_missing_suite_fails_without_smoke(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        (fresh / "sort.json").unlink()
+        assert compare_main(["--fresh", str(fresh)]) == 1
+
+    def test_smoke_limits_to_present_suites(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        for name in ("sort", "fault_overhead"):
+            (fresh / f"{name}.json").unlink()
+        assert compare_main(["--fresh", str(fresh), "--smoke"]) == 0
+
+    def test_suites_subset_and_unknown(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        assert compare_main(["--fresh", str(fresh),
+                             "--suites", "sort,tiering"]) == 0
+        assert compare_main(["--fresh", str(fresh),
+                             "--suites", "nope"]) == 2
+
+    def test_report_written(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        _copy_baselines(fresh)
+        _bump(fresh, "fault_overhead", "batch-on", "store_reads", 1.2)
+        report = tmp_path / "diff.md"
+        assert compare_main(["--fresh", str(fresh),
+                             "--report", str(report)]) == 1
+        text = report.read_text()
+        assert "Regressions (gate FAILED)" in text
+        assert "store_reads" in text
+
+    def test_update_copies_fresh_over_baseline(self, tmp_path):
+        baseline = tmp_path / "base"
+        fresh = tmp_path / "fresh"
+        _copy_baselines(baseline)
+        _copy_baselines(fresh)
+        _bump(fresh, "fault_overhead", "batch-on", "store_reads", 1.5)
+        assert compare_main(["--fresh", str(fresh),
+                             "--baseline", str(baseline),
+                             "--bands", str(DEFAULT_BANDS),
+                             "--update"]) == 0
+        doc = json.loads((baseline / "fault_overhead.json").read_text())
+        row = next(r for r in doc["rows"] if r["config"] == "batch-on")
+        assert row["store_reads"] == 433                   # 289 * 1.5
+        # and a re-compare against the refreshed baseline is clean
+        assert compare_main(["--fresh", str(fresh),
+                             "--baseline", str(baseline),
+                             "--bands", str(DEFAULT_BANDS)]) == 0
+
+    def test_update_requires_fresh_dir(self):
+        assert compare_main(["--update"]) == 2
+
+    def test_bad_bands_file_is_usage_error(self, tmp_path):
+        bad = tmp_path / "bad.toml"
+        bad.write_text("[metric.seconds]\ntypo_tol = 1.0\n")
+        assert compare_main(["--bands", str(bad)]) == 2
+
+
+# ------------------------------------------------------------ compare_suite
+
+
+class TestCompareSuite:
+    def _bands(self):
+        return BandTable({"default": {"rel_tol": 0.1, "direction": "lower"}})
+
+    def test_new_rows_and_metrics_are_informational(self):
+        base = [{"workload": "w", "config": "a", "page_size": 1,
+                 "seconds": 1.0}]
+        fresh = [{"workload": "w", "config": "a", "page_size": 1,
+                  "seconds": 1.0, "new_metric": 5},
+                 {"workload": "w", "config": "b", "page_size": 1,
+                  "seconds": 9.9}]
+        findings = compare_suite("s", base, fresh, self._bands())
+        assert all(f.verdict != REGRESSION for f in findings)
+
+    def test_row_identity_is_workload_config_pagesize(self):
+        base = [{"workload": "w", "config": "a", "page_size": 4096,
+                 "seconds": 1.0}]
+        fresh = [{"workload": "w", "config": "a", "page_size": 8192,
+                  "seconds": 1.0}]
+        findings = compare_suite("s", base, fresh, self._bands())
+        assert any(f.metric == "<row>" and f.verdict == REGRESSION
+                   for f in findings)

@@ -393,3 +393,34 @@ def test_snapshot_key_parity_between_aggregate_and_per_shard():
         assert st["leases"] == 1
     finally:
         uunmap(r)
+
+
+def test_snapshot_key_parity_covers_error_and_tier_counters():
+    """Parity extension for the §14 counters (satellite task): the error /
+    quarantine trio is shard-owned (aggregate == per-shard sum) and the
+    tier-migration counters are service-owned (present in the aggregate,
+    absent from per_shard) — so telemetry collectors can rely on the key
+    placement, not just the key set."""
+    from repro.core.pager import _SERVICE_COUNTERS, _SHARD_COUNTERS
+
+    for key in ("io_errors", "writeback_errors", "quarantined_pages"):
+        assert key in _SHARD_COUNTERS, key
+    for key in ("tier_promotions", "tier_demotions", "tier_errors"):
+        assert key in _SERVICE_COUNTERS, key
+
+    npages, ps = 32, 4096
+    store = HostArrayStore((np.arange(npages * ps) % 251).astype(np.uint8))
+    cfg = UMapConfig(page_size=ps, buffer_size=npages * ps, num_fillers=2,
+                     num_evictors=1, shards=4)
+    r = umap(store, config=cfg)
+    try:
+        for pno in range(npages):
+            r.read(pno * ps, 64)
+        st = r.stats()
+        for key in ("io_errors", "writeback_errors", "quarantined_pages"):
+            assert st[key] == sum(s[key] for s in st["per_shard"]), key
+        for key in ("tier_promotions", "tier_demotions", "tier_errors"):
+            assert key in st, key
+            assert key not in st["per_shard"][0], key
+    finally:
+        uunmap(r)
