@@ -1,0 +1,247 @@
+"""Multi-tenant serving benchmark (DESIGN.md §16): hundreds of concurrent
+synthetic sessions through the continuous-batching engine.
+
+Four instrumented runs, all on the tiny smoke-config model so the numbers
+measure the ENGINE (page pool, admission, sharing), not the matmuls:
+
+  sharing         3 tenants (gold / silver / bronze, weighted 4:2:1) with
+                  per-tenant registered prompt prefixes — the headline run:
+                  p50/p99 latency (aggregate + per tenant), tokens/s,
+                  COW + prefix-sharing counters, peak pool pages.
+  no-sharing      identical workload with prefix sharing disabled — the
+                  peak-page delta is the sharing claim's witness.
+  gold-alone      the gold tenant's sessions with the pool to themselves.
+  gold-contended  same gold schedule plus a bronze noise flood; the ratio
+                  p99(contended) / p99(alone) is the tenant-isolation
+                  witness — priority admission + weighted victim selection
+                  must keep it near 1 even under a noisy neighbor.
+
+The summary row carries the two derived claims the gate watches:
+``shared_savings_pages`` (peak no-sharing − peak sharing, higher-is-better)
+and ``isolation_ratio`` (lower-is-better).
+
+Run standalone (``python -m benchmarks.bench_serve [--smoke|--full]``) or
+via ``python -m benchmarks.run --only serve``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+try:
+    from .common import Row
+except ImportError:                     # pragma: no cover - script mode
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import Row
+
+PAGE_SIZE = 4          # tokens/page — small so sessions span many pages
+NUM_PAGES = 160        # pool pages: tight enough for real pressure
+MAX_BATCH = 8
+MAX_NEW = 8            # decode tokens per session
+PREFIX_LEN = 20        # tokens in each tenant's registered prefix
+SUBMIT_PER_STEP = 2    # open-loop arrival rate (sessions per engine step)
+
+TENANTS = (
+    ("gold", 4.0, 2, True),
+    ("silver", 2.0, 1, False),
+    ("bronze", 1.0, 0, False),
+)
+
+
+def _build_engine(cfg, params, prefix_sharing=True):
+    from repro.serve.engine import EngineConfig, ServeEngine, Tenant
+
+    ecfg = EngineConfig(max_batch=MAX_BATCH, page_size=PAGE_SIZE,
+                        num_pages=NUM_PAGES, max_pages_per_seq=32,
+                        prefill_bucket=32, prefix_sharing=prefix_sharing)
+    eng = ServeEngine(cfg, params, ecfg)
+    for name, weight, prio, pin in TENANTS:
+        eng.add_tenant(Tenant(name, weight=weight, priority=prio,
+                              pin_fast=pin))
+    return eng
+
+
+def _make_sessions(cfg, rng, n_sessions: int,
+                   tenant_prefixes: Dict[str, np.ndarray],
+                   tenants: Optional[List[str]] = None):
+    """Deterministic synthetic sessions: tenant prefix + random suffix."""
+    from repro.serve.engine import Request
+
+    names = tenants or [t[0] for t in TENANTS]
+    sessions = []
+    for i in range(n_sessions):
+        tenant = names[i % len(names)]
+        suffix = rng.integers(1, cfg.vocab_size,
+                              int(rng.integers(3, 9))).astype(np.int32)
+        prompt = np.concatenate([tenant_prefixes[tenant], suffix])
+        sessions.append(Request(rid=i, prompt=prompt, max_new_tokens=MAX_NEW,
+                                tenant=tenant))
+    return sessions
+
+
+def _drive(eng, sessions, submit_per_step=SUBMIT_PER_STEP, warm=8):
+    """Open-loop driver: a few sessions up front, then a steady arrival
+    rate per engine step until everything drains.  Returns wall seconds."""
+    it = iter(sessions)
+    pending = len(sessions)
+    for _ in range(min(warm, pending)):
+        eng.submit(next(it))
+        pending -= 1
+    t0 = time.perf_counter()
+    for _ in range(100_000):
+        for _ in range(min(submit_per_step, pending)):
+            eng.submit(next(it))
+            pending -= 1
+        if not pending and not eng.waiting and not eng.active:
+            break
+        eng.step()
+    else:                               # pragma: no cover - driver wedged
+        raise RuntimeError("serve bench did not drain")
+    return time.perf_counter() - t0
+
+
+def _latencies_ms(requests) -> Dict[str, List[float]]:
+    by_tenant: Dict[str, List[float]] = {}
+    for r in requests:
+        by_tenant.setdefault(r.tenant, []).append(1e3 * r.latency_s)
+    return by_tenant
+
+
+def _pctl(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def run(quick: bool = True) -> List[Row]:
+    import jax
+
+    import repro.models as M
+    from repro.configs.registry import get_smoke_config
+
+    n_sessions = 216 if quick else 480
+    n_iso = 36 if quick else 90
+
+    cfg = get_smoke_config("smollm-135m")
+    params = M.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(42)
+    tenant_prefixes = {
+        name: rng.integers(1, cfg.vocab_size, PREFIX_LEN).astype(np.int32)
+        for name, *_ in TENANTS}
+
+    rows: List[Row] = []
+
+    # ---- headline: 3-tenant mixed load, prefix sharing on ----------------
+    eng = _build_engine(cfg, params, prefix_sharing=True)
+    for name, *_ in TENANTS:
+        eng.register_prefix(tenant_prefixes[name], tenant=name)
+    sessions = _make_sessions(cfg, np.random.default_rng(1), n_sessions,
+                              tenant_prefixes)
+    dt = _drive(eng, sessions)
+    lat = _latencies_ms(eng.finished)
+    all_ms = [x for xs in lat.values() for x in xs]
+    tokens = sum(len(r.generated) for r in eng.finished)
+    st = eng.stats
+    rows.append(Row("serve", "sharing", PAGE_SIZE, round(dt, 3), {
+        "sessions": n_sessions,
+        "tenants": len(TENANTS),
+        "finished_sessions": len(eng.finished),
+        "expired": st["expired"],
+        "p50_ms": round(_pctl(all_ms, 50), 2),
+        "p99_ms": round(_pctl(all_ms, 99), 2),
+        "p99_gold_ms": round(_pctl(lat.get("gold", []), 99), 2),
+        "p99_bronze_ms": round(_pctl(lat.get("bronze", []), 99), 2),
+        "tokens_per_s": round(tokens / dt, 1) if dt else float("nan"),
+        "peak_pages": st["peak_pages_used"],
+        "prefix_hits": st["prefix_hits"],
+        "shared_pages_mapped": st["shared_pages_mapped"],
+        "cow_copies": st["cow_copies"],
+        "requeues": st["requeues"],
+        "victim_evictions": st["victim_evictions"],
+    }))
+    shared_peak = st["peak_pages_used"]
+
+    # ---- witness: identical workload, sharing off ------------------------
+    eng = _build_engine(cfg, params, prefix_sharing=False)
+    sessions = _make_sessions(cfg, np.random.default_rng(1), n_sessions,
+                              tenant_prefixes)
+    dt = _drive(eng, sessions)
+    st = eng.stats
+    rows.append(Row("serve", "no-sharing", PAGE_SIZE, round(dt, 3), {
+        "sessions": n_sessions,
+        "finished_sessions": len(eng.finished),
+        "expired": st["expired"],
+        "peak_pages": st["peak_pages_used"],
+        "requeues": st["requeues"],
+        "victim_evictions": st["victim_evictions"],
+    }))
+    plain_peak = st["peak_pages_used"]
+
+    # ---- isolation witness: gold alone vs gold + bronze noise ------------
+    gold_prefix = {"gold": tenant_prefixes["gold"]}
+    p99_gold = {}
+    for label, noisy in (("gold-alone", 0), ("gold-contended", 2)):
+        eng = _build_engine(cfg, params, prefix_sharing=True)
+        eng.register_prefix(tenant_prefixes["gold"], tenant="gold")
+        gold = _make_sessions(cfg, np.random.default_rng(2), n_iso,
+                              gold_prefix, tenants=["gold"])
+        sessions = list(gold)
+        if noisy:
+            noise_rng = np.random.default_rng(3)
+            from repro.serve.engine import Request
+            for j in range(noisy * n_iso):
+                prompt = np.concatenate([
+                    tenant_prefixes["bronze"],
+                    noise_rng.integers(1, cfg.vocab_size,
+                                       int(noise_rng.integers(6, 13))
+                                       ).astype(np.int32)])
+                sessions.append(Request(rid=10_000 + j, prompt=prompt,
+                                        max_new_tokens=MAX_NEW,
+                                        tenant="bronze"))
+            # interleave noise with gold traffic deterministically
+            order = np.random.default_rng(4).permutation(len(sessions))
+            sessions = [sessions[i] for i in order]
+        dt = _drive(eng, sessions)
+        lat = _latencies_ms(eng.finished)
+        p99 = _pctl(lat.get("gold", []), 99)
+        p99_gold[label] = p99
+        rows.append(Row("serve", label, PAGE_SIZE, round(dt, 3), {
+            "sessions": len(sessions),
+            "finished_sessions": len(eng.finished),
+            "expired": eng.stats["expired"],
+            "p99_gold_ms": round(p99, 2),
+            "victim_evictions": eng.stats["victim_evictions"],
+        }))
+
+    rows.append(Row("serve", "summary", PAGE_SIZE, 0.0, {
+        "shared_savings_pages": plain_peak - shared_peak,
+        "isolation_ratio": round(
+            p99_gold["gold-contended"] / p99_gold["gold-alone"], 2),
+    }))
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import print_rows, save_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger session count")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick run, JSON artifact")
+    args = ap.parse_args(argv)
+    rows = run(quick=not args.full)
+    path = save_rows("serve", rows)
+    print_rows(rows)
+    print(f"# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -81,6 +81,7 @@ SUITES = {
     "fault_storm": ("bench_fault_storm", "§3.3 scaling"),
     "writeback": ("bench_writeback", "§3.5 write-back"),
     "tiering": ("bench_tiering", "§3.4 tiered store"),
+    "serve": ("bench_serve", "§16 serving"),
 }
 
 
@@ -138,6 +139,13 @@ def main(argv=None) -> int:
                     ratio = summary.extra["speedup_tiered_vs_slow_only"]
                     print(f"# {name} ({fig}): fill-throughput speedup "
                           f"tiered vs slow-only = {ratio:.2f}x", flush=True)
+            elif name == "serve":                # sharing + isolation witness
+                summary = next((r for r in rows if r.config == "summary"), None)
+                if summary:
+                    print(f"# {name} ({fig}): prefix sharing saved "
+                          f"{summary.extra['shared_savings_pages']} peak pages; "
+                          f"gold p99 isolation ratio = "
+                          f"{summary.extra['isolation_ratio']:.2f}", flush=True)
         except Exception as e:  # noqa: BLE001
             all_ok = False
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)

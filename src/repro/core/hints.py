@@ -135,6 +135,50 @@ def phase_for_advice(advice: AccessAdvice) -> Phase:
     return _ADVICE_TO_PHASE[advice]
 
 
+# ----------------------------------------------- serving-tenant hints (§16)
+
+def fair_shares(weights: "dict[str, float]", total_pages: int
+                ) -> "dict[str, int]":
+    """Apportion a page budget across tenants by weight (DESIGN.md §16.2).
+
+    The serving engine's per-tenant watermark gate compares each tenant's
+    page consumption against its fair share of the pool — the paper's §3.5
+    occupancy watermark made tenant-relative.  Largest-remainder
+    apportionment: shares sum exactly to ``total_pages``, every tenant with
+    positive weight gets its floor, and leftover pages go to the largest
+    fractional remainders (ties broken by tenant name for determinism).
+    """
+    if total_pages < 0:
+        raise ValueError("total_pages must be >= 0")
+    if not weights:
+        return {}
+    wsum = float(sum(weights.values()))
+    if wsum <= 0 or any(w < 0 for w in weights.values()):
+        raise ValueError("tenant weights must be non-negative, sum > 0")
+    exact = {name: total_pages * w / wsum for name, w in weights.items()}
+    shares = {name: int(exact[name]) for name in weights}
+    leftover = total_pages - sum(shares.values())
+    by_remainder = sorted(weights, key=lambda n: (shares[n] - exact[n], n))
+    for name in by_remainder[:leftover]:
+        shares[name] += 1
+    return shares
+
+
+def deadline_headroom_s(deadline_s: "float | None", submitted_at: float,
+                        now: float) -> float:
+    """Remaining SLO budget of a request in seconds (DESIGN.md §16.3).
+
+    ``inf`` when the request carries no deadline — such requests always
+    pass the SLO admission check and sort after any deadlined request.
+    A negative value means the deadline has already been missed; admission
+    does not defer those (deferring a lost cause frees nothing) but the
+    engine marks them ``slo_miss`` on completion.
+    """
+    if deadline_s is None:
+        return math.inf
+    return deadline_s - (now - submitted_at)
+
+
 def plan_prefetch(
     offsets: Iterable[int], page_size: int, max_pages: int = 256
 ) -> List[int]:

@@ -162,15 +162,54 @@ class PagedKVCache:
             self.v_pool = self.v_pool.at[:, idx].set(vp.astype(self.v_pool.dtype))
             self.seq_len[seq_id] = S
 
+    def share_prefix(self, src_seq: int, dst_seq: int, tokens: int) -> int:
+        """Map ``src_seq``'s first ``tokens`` positions into ``dst_seq``
+        copy-on-write (prompt-prefix sharing, DESIGN.md §16.4).
+
+        Only whole pages are shared (``tokens`` is rounded DOWN to a page
+        multiple — a partial boundary page would be written by the
+        destination immediately, defeating the share).  Returns the number
+        of positions actually shared.  The shared pages stay read-only for
+        ``dst_seq``: the first :meth:`append_token` landing in one triggers
+        a COW device copy automatically.
+        """
+        ps = self.cfg.page_size
+        with self._locked_meta():
+            if self.pages_dropped.get(src_seq, 0):
+                raise ValueError(
+                    "cannot share from a window-evicted sequence: its page "
+                    "list no longer starts at logical page 0")
+            n_pages = min(tokens, self.seq_len.get(src_seq, 0)) // ps
+            if n_pages <= 0:
+                return 0
+            self.allocator.share(src_seq, dst_seq, n_pages)
+            self.seq_len[dst_seq] = n_pages * ps
+            return n_pages * ps
+
+    def _cow_for_write(self, seq_id: int, page_idx: int) -> int:
+        """Give ``seq_id`` a private copy of its ``page_idx``-th page before
+        a write lands in it; returns the (possibly new) physical page.
+        Caller holds the metadata lock."""
+        res = self.allocator.make_private(seq_id, page_idx)
+        if res is not None:
+            old, new = res
+            self.k_pool = self.k_pool.at[:, new].set(self.k_pool[:, old])
+            self.v_pool = self.v_pool.at[:, new].set(self.v_pool[:, old])
+        return self.allocator.pages_of(seq_id)[page_idx]
+
     def append_token(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
-        """Append one token.  k/v: [L, KVH, D].  Allocates a page on boundary."""
+        """Append one token.  k/v: [L, KVH, D].  Allocates a page on boundary;
+        copies a shared page (COW) before the first divergent write."""
         ps = self.cfg.page_size
         with self._locked_meta():
             pos = self.seq_len[seq_id]
             if pos % ps == 0:
                 self.allocator.alloc(seq_id, 1)
-            page = self.allocator.pages_of(seq_id)[
-                pos // ps - self.pages_dropped.get(seq_id, 0)]
+            idx = pos // ps - self.pages_dropped.get(seq_id, 0)
+            if self.allocator.is_shared(seq_id, idx):
+                page = self._cow_for_write(seq_id, idx)
+            else:
+                page = self.allocator.pages_of(seq_id)[idx]
             slot = pos % ps
             self.k_pool = self.k_pool.at[:, page, slot].set(k.astype(self.k_pool.dtype))
             self.v_pool = self.v_pool.at[:, page, slot].set(v.astype(self.v_pool.dtype))
@@ -310,6 +349,9 @@ class PagedKVCache:
                 "occupancy": self.allocator.occupancy(),
                 "page_bytes": self.cfg.page_bytes,
                 "sequences": len(self.seq_len),
+                "cow_copies": self.allocator.cow_copies,
+                "shared_pages": self.allocator.shared_pages(),
+                "shared_pages_mapped": self.allocator.shared_mapped,
                 "auto_evicted_pages": self.auto_evicted_pages,
                 "host_lock_contended": self._meta_contended,
                 "leases": self._lease_count,

@@ -25,7 +25,46 @@ _ENGINE_COUNTERS = (
     ("requeues", "umap_serve_requeues_total",
      "Evicted requests re-queued for restart"),
     ("admission_pauses", "umap_serve_admission_pauses_total",
-     "High-watermark admission pauses"),
+     "High-watermark admission pauses (global + per-tenant gates)"),
+    ("slo_deferrals", "umap_serve_slo_deferrals_total",
+     "Admissions deferred for insufficient deadline headroom"),
+    ("slo_misses", "umap_serve_slo_misses_total",
+     "Requests finished past their deadline"),
+    ("expired", "umap_serve_expired_total",
+     "Requests abandoned after max_restarts requeues"),
+    ("victim_evictions", "umap_serve_victim_evictions_total",
+     "Sequences evicted as reclaim victims under pool pressure"),
+    ("cow_copies", "umap_serve_cow_copies_total",
+     "Copy-on-write page copies (shared prefix divergence)"),
+    ("shared_pages_mapped", "umap_serve_shared_pages_mapped_total",
+     "Prefix pages mapped into requests without copying"),
+    ("prefix_hits", "umap_serve_prefix_hits_total",
+     "Admissions that matched a registered prompt prefix"),
+    ("prefix_drops", "umap_serve_prefix_drops_total",
+     "Registered prefixes dropped (reclaim or explicit)"),
+)
+
+#: per-tenant stats keys exported with a ``tenant`` label (DESIGN.md §16.6);
+#: each engine aggregate above that has a per-tenant breakdown appears here.
+_TENANT_COUNTERS = (
+    ("prefills", "umap_serve_tenant_prefills_total",
+     "Per-tenant requests prefilled"),
+    ("evictions", "umap_serve_tenant_evictions_total",
+     "Per-tenant sequences evicted"),
+    ("requeues", "umap_serve_tenant_requeues_total",
+     "Per-tenant requeues"),
+    ("admission_pauses", "umap_serve_tenant_admission_pauses_total",
+     "Per-tenant fair-share watermark pauses"),
+    ("slo_deferrals", "umap_serve_tenant_slo_deferrals_total",
+     "Per-tenant SLO admission deferrals"),
+    ("slo_misses", "umap_serve_tenant_slo_misses_total",
+     "Per-tenant deadline misses"),
+    ("expired", "umap_serve_tenant_expired_total",
+     "Per-tenant expired requests"),
+    ("finished", "umap_serve_tenant_finished_total",
+     "Per-tenant retired requests"),
+    ("tokens_generated", "umap_serve_tenant_tokens_generated_total",
+     "Per-tenant decoded tokens"),
 )
 
 _KV_GAUGES = (
@@ -76,7 +115,19 @@ class ServeCollector(Collector):
                 self.g1("umap_serve_pool_occupancy_ratio",
                         "KV page-pool occupancy [0,1]",
                         eng.allocator.occupancy()),
+                self.g1("umap_serve_peak_pages_used",
+                        "High-water mark of pool pages in use",
+                        st.get("peak_pages_used", 0)),
+                self.g1("umap_serve_tenants",
+                        "Registered tenants", len(getattr(eng, "tenants", ()))),
             ]
+            per_tenant = st.get("per_tenant") or {}
+            if per_tenant:
+                for key, name, help_ in _TENANT_COUNTERS:
+                    fam = self.counter(name, help_)
+                    for tenant in sorted(per_tenant):
+                        fam.add(per_tenant[tenant].get(key, 0), tenant=tenant)
+                    fams.append(fam)
         if self.kv is not None:
             st = self.kv.stats()
             fams += [self.g1(m, h, st[k]) for k, m, h in _KV_GAUGES]
@@ -86,6 +137,15 @@ class ServeCollector(Collector):
                 self.c1("umap_kv_host_lock_contended_total",
                         "Contended KV host-metadata lock acquisitions",
                         st["host_lock_contended"]),
+                self.c1("umap_kv_cow_copies_total",
+                        "Copy-on-write page copies in the KV pool",
+                        st.get("cow_copies", 0)),
+                self.g1("umap_kv_shared_pages",
+                        "Physical pages currently mapped by >1 sequence",
+                        st.get("shared_pages", 0)),
+                self.c1("umap_kv_shared_pages_mapped_total",
+                        "Prefix pages mapped without copying",
+                        st.get("shared_pages_mapped", 0)),
             ]
             phases = self.gauge(
                 "umap_kv_sequences_by_phase",

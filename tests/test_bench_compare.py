@@ -220,9 +220,10 @@ class TestCommittedGoldenFiles:
     def _suites(self):
         return sorted(p for p in RESULTS_DIR.glob("*.json"))
 
-    def test_five_baselines_committed(self):
+    def test_six_baselines_committed(self):
         assert {p.stem for p in self._suites()} == {
-            "fault_overhead", "fault_storm", "sort", "tiering", "writeback"}
+            "fault_overhead", "fault_storm", "serve", "sort", "tiering",
+            "writeback"}
 
     def test_all_baselines_are_v2_and_loadable(self):
         for path in self._suites():
@@ -240,6 +241,9 @@ class TestCommittedGoldenFiles:
         assert table.lookup("fault_storm", "best_speedup").direction == "higher"
         assert table.lookup("tiering", "io_errors").abs_tol == 0.0
         assert table.lookup("fault_storm", "lock_contended").direction == "ignore"
+        assert table.lookup("serve", "isolation_ratio").direction == "lower"
+        assert table.lookup("serve", "shared_savings_pages").direction == "higher"
+        assert table.lookup("serve", "expired").abs_tol == 0.0
 
     def test_self_compare_of_committed_baselines_passes(self, capsys):
         assert compare_main([]) == 0

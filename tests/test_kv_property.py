@@ -1,0 +1,158 @@
+"""Property-based tests (hypothesis) for the KV PageAllocator invariants.
+
+The allocator is the serving engine's free list + refcount table
+(DESIGN.md §16.4).  Random interleavings of alloc / share / make_private /
+free_prefix / free_seq / table_for must preserve:
+
+  * no physical page is owned by two live sequences unless it is explicitly
+    refcount-shared (refcount == number of page-table entries referencing it);
+  * ``free_pages + referenced_physical_pages == num_pages`` at every step;
+  * ``occupancy()`` is exactly ``used_pages / num_pages`` and moves only when
+    physical ownership changes;
+  * the scratch page (seq -1's page 0) is never handed out again while held;
+  * a page whose refcount drops to 0 returns to the free list exactly once
+    (no double free, no leak).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.kvcache.allocator import OutOfPages, PageAllocator
+
+NUM_PAGES = 24
+SEQ_IDS = list(range(1, 6))
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["alloc", "share", "cow", "free_seq",
+                         "free_prefix", "table"]),
+        st.sampled_from(SEQ_IDS),          # primary sequence
+        st.sampled_from(SEQ_IDS),          # secondary (share destination)
+        st.integers(min_value=1, max_value=6),   # page count / index
+    ),
+    min_size=1,
+    max_size=80,
+)
+
+
+def check_invariants(a: PageAllocator, model: dict):
+    # model: seq_id -> list of physical pages (the oracle page tables)
+    refs = {}
+    for pages in model.values():
+        for p in pages:
+            refs[p] = refs.get(p, 0) + 1
+    # refcount == number of live page-table entries referencing the page
+    for p, n in refs.items():
+        assert a.refcount(p) == n
+    # every page is free xor referenced; accounting closes exactly
+    referenced = set(refs)
+    free = set(a._free)
+    assert not (referenced & free), "page simultaneously free and referenced"
+    assert len(referenced) + len(free) == NUM_PAGES
+    assert a.free_pages == len(free)
+    assert a.used_pages == len(referenced)
+    assert a.occupancy() == a.used_pages / NUM_PAGES
+    # no page appears on the free list twice (refcount 0 => returned once)
+    assert len(a._free) == len(set(a._free))
+    # shared_pages counts exactly the physical pages with >1 mapping
+    assert a.shared_pages() == sum(1 for n in refs.values() if n > 1)
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy)
+def test_allocator_random_interleavings_preserve_invariants(ops):
+    a = PageAllocator(NUM_PAGES)
+    scratch = a.alloc(-1, 1)[0]          # engine's scratch page
+    model = {-1: [scratch]}
+    for kind, s1, s2, n in ops:
+        if kind == "alloc":
+            try:
+                pages = a.alloc(s1, n)
+            except OutOfPages:
+                assert a.free_pages < n
+            else:
+                assert len(pages) == n
+                model.setdefault(s1, []).extend(pages)
+        elif kind == "share":
+            src = model.get(s1, [])
+            if s1 == s2 or not src or model.get(s2):
+                # invalid share: allocator must refuse without state change
+                if s1 != s2 and model.get(s2):
+                    with pytest.raises(ValueError):
+                        a.share(s1, s2, min(n, max(len(src), 1)))
+                continue
+            k = min(n, len(src))
+            got = a.share(s1, s2, k)
+            assert got == src[:k]
+            if k:
+                model[s2] = list(src[:k])
+        elif kind == "cow":
+            pages = model.get(s1, [])
+            if not pages:
+                continue
+            idx = (n - 1) % len(pages)
+            try:
+                res = a.make_private(s1, idx)
+            except OutOfPages:
+                assert a.free_pages == 0
+            else:
+                if res is None:
+                    # page was private already: COW must be a no-op
+                    assert sum(pgs.count(pages[idx])
+                               for pgs in model.values()) == 1
+                else:
+                    old, new = res
+                    assert old == pages[idx] and new != old
+                    model[s1][idx] = new
+        elif kind == "free_seq":
+            released = a.free_seq(s1)
+            assert released == len(model.pop(s1, []))
+        elif kind == "free_prefix":
+            pages = model.get(s1, [])
+            k = min(n, len(pages))
+            dropped = a.free_prefix(s1, k)
+            assert dropped == pages[:k]
+            if s1 in model:
+                model[s1] = pages[k:]
+        elif kind == "table":
+            row = a.table_for(s1, 8)
+            pages = model.get(s1, [])[:8]
+            assert list(row[: len(pages)]) == pages
+            assert (row[len(pages):] == 0).all()
+        # scratch page held throughout: never reallocated, refcount stays 1
+        assert a.refcount(scratch) == 1 and a.pages_of(-1) == [scratch]
+        check_invariants(a, model)
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n_share=st.integers(min_value=1, max_value=4),
+       cow_idx=st.integers(min_value=0, max_value=3),
+       free_src_first=st.booleans())
+def test_cow_refcounts_shared_page_freed_exactly_once(
+        n_share, cow_idx, free_src_first):
+    """share/unshare never frees a page with live refs; refcount 0 returns
+    the page to the free list exactly once."""
+    a = PageAllocator(16)
+    src = a.alloc(1, 4)
+    a.share(1, 2, n_share)
+    shared = src[:n_share]
+    for p in shared:
+        assert a.refcount(p) == 2
+    if cow_idx < n_share:
+        old, new = a.make_private(2, cow_idx)
+        assert old == shared[cow_idx] and a.refcount(old) == 1
+        assert a.refcount(new) == 1 and a.cow_copies == 1
+    first, second = (1, 2) if free_src_first else (2, 1)
+    a.free_seq(first)
+    # pages still mapped by the survivor must not be on the free list
+    for p in a.pages_of(second):
+        assert a.refcount(p) == 1
+        assert p not in a._free
+    a.free_seq(second)
+    assert a.free_pages == 16 and a.used_pages == 0
+    assert sorted(a._free) == sorted(set(a._free))

@@ -389,6 +389,7 @@ class _FakeKV:
         return {"leases": 3 + self.n, "lease_blocked_evictions": 1,
                 "leased_sequences": 2, "pages_used": 5, "pages_free": 3,
                 "occupancy": 0.625, "page_bytes": 1 << 14, "sequences": 4,
+                "cow_copies": 2, "shared_pages": 1, "shared_pages_mapped": 3,
                 "auto_evicted_pages": 6, "host_lock_contended": 0,
                 "phases": {1: "stream", 2: "stream", 3: "random"}}
 
@@ -444,11 +445,28 @@ class _FakeAllocator:
 class _FakeEngine:
     def __init__(self):
         self.stats = {"steps": 10, "prefills": 4, "evictions": 1,
-                      "requeues": 1, "admission_pauses": 2}
+                      "requeues": 1, "admission_pauses": 2,
+                      "slo_deferrals": 3, "slo_misses": 1, "expired": 0,
+                      "victim_evictions": 2, "cow_copies": 5,
+                      "shared_pages_mapped": 9, "prefix_hits": 6,
+                      "prefix_drops": 1, "peak_pages_used": 7,
+                      "per_tenant": {
+                          "gold": {"prefills": 3, "evictions": 1,
+                                   "requeues": 1, "admission_pauses": 0,
+                                   "slo_deferrals": 2, "slo_misses": 1,
+                                   "expired": 0, "finished": 3,
+                                   "tokens_generated": 24},
+                          "bronze": {"prefills": 1, "evictions": 0,
+                                     "requeues": 0, "admission_pauses": 2,
+                                     "slo_deferrals": 1, "slo_misses": 0,
+                                     "expired": 0, "finished": 1,
+                                     "tokens_generated": 8},
+                      }}
         self.active = {1: object(), 2: object()}
         self.waiting = [object()]
         self.finished = [object(), object(), object()]
         self.allocator = _FakeAllocator()
+        self.tenants = {"gold": object(), "bronze": object()}
 
 
 class _FakeWeightPager:
@@ -463,12 +481,27 @@ SERVE_ENGINE_FAMILIES = {
     "umap_serve_admission_pauses_total", "umap_serve_active_requests",
     "umap_serve_waiting_requests", "umap_serve_finished_requests_total",
     "umap_serve_pool_occupancy_ratio",
+    "umap_serve_slo_deferrals_total", "umap_serve_slo_misses_total",
+    "umap_serve_expired_total", "umap_serve_victim_evictions_total",
+    "umap_serve_cow_copies_total", "umap_serve_shared_pages_mapped_total",
+    "umap_serve_prefix_hits_total", "umap_serve_prefix_drops_total",
+    "umap_serve_peak_pages_used", "umap_serve_tenants",
+}
+SERVE_TENANT_FAMILIES = {
+    "umap_serve_tenant_prefills_total", "umap_serve_tenant_evictions_total",
+    "umap_serve_tenant_requeues_total",
+    "umap_serve_tenant_admission_pauses_total",
+    "umap_serve_tenant_slo_deferrals_total",
+    "umap_serve_tenant_slo_misses_total", "umap_serve_tenant_expired_total",
+    "umap_serve_tenant_finished_total",
+    "umap_serve_tenant_tokens_generated_total",
 }
 SERVE_KV_FAMILIES = {
     "umap_kv_pages_used", "umap_kv_pages_free", "umap_kv_occupancy_ratio",
     "umap_kv_sequences", "umap_kv_page_size_bytes",
     "umap_kv_auto_evicted_pages_total", "umap_kv_host_lock_contended_total",
-    "umap_kv_sequences_by_phase",
+    "umap_kv_cow_copies_total", "umap_kv_shared_pages",
+    "umap_kv_shared_pages_mapped_total", "umap_kv_sequences_by_phase",
 }
 SERVE_WEIGHT_FAMILIES = {
     "umap_weight_fills_total", "umap_weight_hits_total",
@@ -481,10 +514,24 @@ SERVE_WEIGHT_FAMILIES = {
 class TestServeCollector:
     def test_engine_families(self):
         fams = families_of(ServeCollector(engine=_FakeEngine(), label="e"))
-        assert set(fams) == SERVE_ENGINE_FAMILIES
+        assert set(fams) == SERVE_ENGINE_FAMILIES | SERVE_TENANT_FAMILIES
         assert fams["umap_serve_steps_total"].samples[0][2] == 10
         assert fams["umap_serve_active_requests"].samples[0][2] == 2
         assert fams["umap_serve_pool_occupancy_ratio"].samples[0][2] == 0.5
+
+    def test_per_tenant_labels_match_stats(self):
+        """Every per-tenant family carries one sample per tenant, labeled
+        ``tenant=``, whose value equals the engine's stats dict entry —
+        the same parity contract as aggregate == sum(per_shard)."""
+        eng = _FakeEngine()
+        fams = families_of(ServeCollector(engine=eng, label="e"))
+        per = eng.stats["per_tenant"]
+        for fam_name in SERVE_TENANT_FAMILIES:
+            fam = fams[fam_name]
+            key = fam_name[len("umap_serve_tenant_"):-len("_total")]
+            got = {lab["tenant"]: v for _, lab, v in fam.samples}
+            assert got == {t: float(st[key]) for t, st in per.items()}, \
+                fam_name
 
     def test_kv_families_and_phase_label(self):
         fams = families_of(ServeCollector(kv=_FakeKV(), label="e"))
@@ -504,8 +551,8 @@ class TestServeCollector:
         fams = families_of(ServeCollector(
             engine=_FakeEngine(), kv=_FakeKV(),
             weight_pager=_FakeWeightPager(), label="all"))
-        assert set(fams) == (SERVE_ENGINE_FAMILIES | SERVE_KV_FAMILIES
-                             | SERVE_WEIGHT_FAMILIES)
+        assert set(fams) == (SERVE_ENGINE_FAMILIES | SERVE_TENANT_FAMILIES
+                             | SERVE_KV_FAMILIES | SERVE_WEIGHT_FAMILIES)
 
 
 # --------------------------------------------------------- ProcessCollector
