@@ -1,0 +1,321 @@
+"""Chaos benchmark: throughput under injected faults and time-to-recovery
+after a tier outage (DESIGN.md §17).
+
+A tiered region (host-memory fast tier over a latency-modeled slow store)
+serves a continuous random-read storm from N threads, every read verified
+against the generator pattern.  A scripted ``ChaosStore`` wraps the fast
+tier; the controller walks one timeline:
+
+  healthy     warm-up, then measure fill throughput with both tiers up
+  (kill)      hard-fail the fast tier; wait for its circuit breaker to
+              trip OPEN
+  degraded    measure throughput while the breaker routes everything to
+              the slow tier (transparent failover — no reader sees an
+              error)
+  (revive)    heal the fast tier; the breaker half-opens after its reset
+              window, probes re-admit extents
+  recovery    seconds from revive until a 100 ms throughput window climbs
+              back to 70% of the healthy rate
+
+A separate slow-only run (no fast tier at all) provides the floor the
+degraded phase is judged against, and a separate transient-fault run
+(~3% injected read errors, no outage) shows the retry layer absorbing
+every fault: zero errors surface to readers while the store-level retry
+counters climb.
+
+The run is its own witness: byte mismatches, reader-visible errors, a
+degraded throughput below 1/1.3 of the slow-only floor, a breaker that
+never opens/closes, or a missing ``umap_resilience_*`` family in the
+Prometheus exposition all raise AssertionError here — the compare gate
+then enforces the recorded numbers against committed bands.
+
+Run standalone (``python -m benchmarks.bench_chaos [--smoke|--full]``)
+or via ``python -m benchmarks.run --only chaos``.  Rows land in
+``experiments/bench/chaos.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+PAGE = 4096
+EXTENT = 4 * PAGE
+RECOVERY_FRACTION = 0.6      # "recovered" = window rate >= 60% of healthy
+RECOVERY_WINDOW_S = 0.1
+
+
+_EXPECTED_CACHE: dict = {}
+
+
+def _expected(page: int) -> np.ndarray:
+    out = _EXPECTED_CACHE.get(page)
+    if out is None:
+        idx = np.arange(page * PAGE, (page + 1) * PAGE, dtype=np.uint64)
+        out = _EXPECTED_CACHE[page] = (idx % 249).astype(np.uint8)
+    return out
+
+
+class _Storm:
+    """N reader threads hammering random pages until stopped, counting
+    completed (verified) reads; mismatches and surfaced exceptions are
+    recorded, never swallowed."""
+
+    def __init__(self, region, npages: int, threads: int):
+        self.region = region
+        self.npages = npages
+        self.ops = [0] * threads
+        self.errors: List[str] = []
+        self.mismatches = 0
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._threads = [
+            threading.Thread(target=self._reader, args=(t,), daemon=True)
+            for t in range(threads)
+        ]
+
+    def _reader(self, tid: int) -> None:
+        rng = np.random.default_rng(4000 + tid)
+        while not self._stop.is_set():
+            p = int(rng.integers(0, self.npages))
+            try:
+                got = self.region.read(p * PAGE, PAGE)
+            except Exception as e:  # noqa: BLE001 — surfaced = witness failure
+                with self._lock:
+                    self.errors.append(f"page {p}: {type(e).__name__}: {e}")
+                continue
+            if not np.array_equal(got, _expected(p)):
+                with self._lock:
+                    self.mismatches += 1
+                continue
+            self.ops[tid] += 1
+
+    def start(self) -> None:
+        for t in self._threads:
+            t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join()
+
+    def total(self) -> int:
+        return sum(self.ops)
+
+    def rate_over(self, seconds: float) -> float:
+        n0, t0 = self.total(), time.perf_counter()
+        time.sleep(seconds)
+        return (self.total() - n0) / (time.perf_counter() - t0)
+
+
+def _build_region(npages: int, tiered: bool, chaos_kw: Optional[dict] = None,
+                  **cfg_kw):
+    """Region over [ChaosStore(fast) | nothing] + latency-modeled slow."""
+    from repro.core import (HostArrayStore, RemoteStore, TieredStore,
+                            UMapConfig, umap)
+    from repro.core.resilient import ChaosStore
+
+    total = npages * PAGE
+    idx = np.arange(total, dtype=np.uint64)
+    inner = HostArrayStore((idx % 249).astype(np.uint8))
+    slow = RemoteStore(inner, latency_s=1e-3, bandwidth_Bps=2e9)
+    chaos = None
+    if tiered:
+        chaos = ChaosStore(HostArrayStore(np.zeros(total, np.uint8)),
+                           seed=11, **(chaos_kw or {}))
+        store = TieredStore(chaos, slow, extent_size=EXTENT,
+                            promote_on_read=True)
+    else:
+        store = slow
+    cfg = UMapConfig(
+        page_size=PAGE,
+        buffer_size=max(8, npages // 25) * PAGE,   # fills dominate, not hits
+        num_fillers=4, num_evictors=1, shards=4,
+        resilient_io=True,
+        io_retries=4, retry_backoff_s=0.005, retry_max_backoff_s=0.05,
+        retry_deadline_s=5.0,
+        breaker_threshold=3, breaker_reset_s=0.25, breaker_probes=2,
+        **cfg_kw)
+    region = umap(store, config=cfg)
+    return region, chaos, slow
+
+
+def _slow_only_rate(npages: int, threads: int, measure_s: float) -> float:
+    from repro.core import uunmap
+
+    region, _, _ = _build_region(npages, tiered=False)
+    storm = _Storm(region, npages, threads)
+    storm.start()
+    time.sleep(measure_s / 2)                      # settle
+    rate = storm.rate_over(measure_s)
+    storm.stop()
+    uunmap(region)
+    if storm.errors or storm.mismatches:
+        raise AssertionError(
+            f"slow-only run surfaced {len(storm.errors)} errors / "
+            f"{storm.mismatches} mismatches: {storm.errors[:3]}")
+    return rate
+
+
+def _transient_run(npages: int, threads: int, run_s: float) -> dict:
+    """~3% transient read faults on the fast tier, no outage: the retry
+    layer must absorb every one (reader-visible errors == 0)."""
+    from repro.core import uunmap
+
+    region, chaos, _ = _build_region(
+        npages, tiered=True,
+        chaos_kw={"read_error_rate": 0.03, "permanent_fraction": 0.0})
+    storm = _Storm(region, npages, threads)
+    storm.start()
+    time.sleep(run_s)
+    storm.stop()
+    fast = region.store.fast                       # ResilientStore wrapper
+    rstats = fast.resilience_stats()
+    cstats = chaos.chaos_stats()
+    uunmap(region)
+    if storm.errors or storm.mismatches:
+        raise AssertionError(
+            f"transient faults leaked to readers: {len(storm.errors)} errors"
+            f" / {storm.mismatches} mismatches: {storm.errors[:3]}")
+    injected = cstats["injected_read_errors"] + cstats["injected_write_errors"]
+    if injected > 0 and rstats["retries"] == 0:
+        raise AssertionError("faults injected but no retries recorded")
+    return {
+        "reads_ok": storm.total(),
+        "errors_surfaced": len(storm.errors),
+        "mismatches": storm.mismatches,
+        "injected_errors": injected,
+        "store_retries": rstats["retries"],
+        "store_retries_ok": rstats["retries_ok"],
+    }
+
+
+def run(quick: bool = True) -> List:
+    from repro.core import uunmap
+    from repro.telemetry import TelemetryRegistry
+
+    from .common import Row
+
+    threads = 4
+    if quick:
+        npages, measure_s, recover_cap_s = 400, 0.5, 5.0
+    else:
+        npages, measure_s, recover_cap_s = 1200, 1.5, 10.0
+
+    # --- slow-only floor (separate run: no fast tier at all) -------------
+    slow_rate = _slow_only_rate(npages, threads, measure_s)
+
+    # --- outage timeline -------------------------------------------------
+    region, chaos, _ = _build_region(npages, tiered=True)
+    registry = TelemetryRegistry()
+    region.service.register_telemetry(registry=registry, label="chaos")
+    fast = region.store.fast
+    breaker = fast.breaker
+    storm = _Storm(region, npages, threads)
+    storm.start()
+    time.sleep(measure_s / 2)                      # warm: hot extents promote
+    healthy_rate = storm.rate_over(measure_s)
+
+    chaos.kill()
+    trip_deadline = time.perf_counter() + 5.0
+    while breaker.state != "open" and time.perf_counter() < trip_deadline:
+        time.sleep(0.005)
+    if breaker.state != "open":
+        storm.stop()
+        raise AssertionError("fast-tier breaker never tripped after kill()")
+    degraded_rate = storm.rate_over(measure_s)
+
+    chaos.revive()
+    t_revive = time.perf_counter()
+    recovery_s = recover_cap_s
+    while time.perf_counter() - t_revive < recover_cap_s:
+        if storm.rate_over(RECOVERY_WINDOW_S) >= RECOVERY_FRACTION * healthy_rate:
+            recovery_s = time.perf_counter() - t_revive
+            break
+    storm.stop()
+
+    breaker_stats = breaker.stats()
+    exposition = registry.render()
+    tier_failovers = region.store.tier_failovers
+    svc_stats = region.service.stats
+    region.service.unregister_telemetry()
+    uunmap(region)
+
+    # --- the chaos witness (ISSUE acceptance) ----------------------------
+    if storm.mismatches:
+        raise AssertionError(f"{storm.mismatches} byte mismatches — lost pages")
+    if storm.errors:
+        raise AssertionError(
+            f"{len(storm.errors)} errors surfaced through failover: "
+            f"{storm.errors[:3]}")
+    degraded_ratio = slow_rate / degraded_rate if degraded_rate else float("inf")
+    if degraded_ratio > 1.3:
+        raise AssertionError(
+            f"degraded throughput {degraded_rate:.0f}/s is more than 1.3x "
+            f"below the slow-only floor {slow_rate:.0f}/s")
+    if recovery_s >= recover_cap_s:
+        raise AssertionError(
+            f"no recovery to {RECOVERY_FRACTION:.0%} of healthy within "
+            f"{recover_cap_s}s")
+    if breaker_stats["breaker_opens"] < 1 or breaker_stats["breaker_closes"] < 1:
+        raise AssertionError(f"breaker never cycled: {breaker_stats}")
+    if "umap_resilience_breaker_opens_total" not in exposition:
+        raise AssertionError("resilience metrics missing from exposition")
+
+    # --- transient-fault absorption (separate run) -----------------------
+    transient = _transient_run(npages, threads, run_s=measure_s)
+
+    mk = lambda config, seconds, extra: Row("chaos", config, PAGE, seconds, extra)  # noqa: E731
+    return [
+        mk("healthy", measure_s, {"threads": threads, "npages": npages,
+                                  "reads_per_s": round(healthy_rate, 1)}),
+        mk("degraded", measure_s, {"threads": threads,
+                                   "reads_per_s": round(degraded_rate, 1),
+                                   "tier_failovers": tier_failovers,
+                                   "breaker_opens": breaker_stats["breaker_opens"]}),
+        mk("slow-only", measure_s, {"threads": threads,
+                                    "reads_per_s": round(slow_rate, 1)}),
+        mk("recovery", recovery_s, {
+            "recovery_s": round(recovery_s, 3),
+            "recovery_fraction": RECOVERY_FRACTION,
+            "breaker_closes": breaker_stats["breaker_closes"],
+            "degraded_seconds": round(breaker_stats["degraded_seconds"], 3)}),
+        mk("transient", measure_s, transient),
+        mk("summary", 0.0, {
+            "degraded_ratio": round(degraded_ratio, 3),
+            "recovery_s": round(recovery_s, 3),
+            "lost_pages": storm.mismatches,
+            "errors_surfaced": len(storm.errors),
+            "quarantined_pages": svc_stats.quarantined_pages,
+            "healthy_over_slow": round(healthy_rate / slow_rate, 2)
+            if slow_rate else float("nan")}),
+    ]
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import print_rows, save_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="longer timeline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick timeline, JSON artifact")
+    args = ap.parse_args(argv)
+    rows = run(quick=not args.full)
+    path = save_rows("chaos", rows)
+    print_rows(rows)
+    summary = rows[-1]
+    print(f"# chaos (§17): degraded/slow-only ratio = "
+          f"{summary.extra['degraded_ratio']:.2f} (<= 1.3), recovery to "
+          f"{RECOVERY_FRACTION:.0%} healthy in {summary.extra['recovery_s']:.2f}s")
+    print(f"# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -13,6 +13,8 @@
               (DESIGN.md §13)
   tiering     §3.4    skewed fault storm: heat-driven migration, tiered
               vs slow-tier-only (DESIGN.md §14)
+  chaos       §17     scripted fault injection: throughput under faults,
+              circuit-broken failover, time-to-recovery (DESIGN.md §17)
   fault_overhead  µs/fault microbenchmark feeding the PageSizeAdvisor
 
 Prints ``name,us_per_call,derived`` CSV and writes JSON rows under
@@ -82,6 +84,7 @@ SUITES = {
     "writeback": ("bench_writeback", "§3.5 write-back"),
     "tiering": ("bench_tiering", "§3.4 tiered store"),
     "serve": ("bench_serve", "§16 serving"),
+    "chaos": ("bench_chaos", "§17 resilience"),
 }
 
 
@@ -139,6 +142,14 @@ def main(argv=None) -> int:
                     ratio = summary.extra["speedup_tiered_vs_slow_only"]
                     print(f"# {name} ({fig}): fill-throughput speedup "
                           f"tiered vs slow-only = {ratio:.2f}x", flush=True)
+            elif name == "chaos":                # failover + recovery witness
+                summary = next((r for r in rows if r.config == "summary"), None)
+                if summary:
+                    print(f"# {name} ({fig}): degraded/slow-only ratio = "
+                          f"{summary.extra['degraded_ratio']:.2f}, recovery "
+                          f"in {summary.extra['recovery_s']:.2f}s, "
+                          f"{summary.extra['errors_surfaced']} errors "
+                          f"surfaced", flush=True)
             elif name == "serve":                # sharing + isolation witness
                 summary = next((r for r in rows if r.config == "summary"), None)
                 if summary:

@@ -7,6 +7,7 @@
 #   pager      fault queue, filler/evictor pools, load balancing (§3.2–3.3)
 #   watermark  dirty-page high/low-watermark flushing (§3.5)
 #   region     umap()/uunmap() mmap-like API (§4.1)
+#   resilient  retries / circuit breakers / checksums + chaos harness (DESIGN.md §17)
 #   hints      access advisors, prefetch planning, page-size advisor (§3.6)
 #   pattern    online access-pattern classifier — adaptive engine (DESIGN.md §8)
 
@@ -46,6 +47,14 @@ from .pattern import (  # noqa: F401
 )
 from .pager import PagingService, ServiceStats  # noqa: F401
 from .region import UMapArrayView, UMapRegion, umap, uunmap  # noqa: F401
+from .resilient import (  # noqa: F401
+    BreakerOpenError,
+    ChaosStore,
+    CircuitBreaker,
+    CorruptPageError,
+    ResilientStore,
+    RetryPolicy,
+)
 from .store import (  # noqa: F401
     BackingStore,
     FaultyStore,

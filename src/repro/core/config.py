@@ -27,6 +27,17 @@ Extensions beyond the paper's list (this repo's adaptive engine, DESIGN.md ยง8โ
   UMAP_TIER_DECAY                     per-cycle heat decay factor (default 0.8)
   UMAP_TIER_PROMOTE_HEAT              heat threshold for promotion (default 2.0)
   UMAP_TIER_MAX_MIGRATIONS            max promote/demote pairs per cycle (default 8)
+  UMAP_RESILIENT_IO                   wrap region stores in ResilientStore + pager-level
+                                      fill/write-back retries (default off; DESIGN.md ยง17)
+  UMAP_RETRY_LIMIT                    retry attempts per store op after the first try (default 3)
+  UMAP_RETRY_BACKOFF_MS               initial retry backoff (default 2 ms; doubles per retry)
+  UMAP_RETRY_MAX_BACKOFF_MS           exponential backoff cap (default 100 ms)
+  UMAP_RETRY_DEADLINE_MS              whole-op wall-clock budget incl. retries (default 2000 ms)
+  UMAP_VERIFY_READS                   per-page CRC32 verified on store reads (default off)
+  UMAP_HEDGE_DELAY_MS                 hedged-read trigger delay; 0 disables hedging (default 0)
+  UMAP_BREAKER_THRESHOLD              consecutive failures that trip a store breaker (default 5)
+  UMAP_BREAKER_RESET_MS               open -> half-open probe delay (default 500 ms)
+  UMAP_BREAKER_PROBES                 half-open probe successes required to close (default 2)
 
 Process-level controls read outside UMapConfig (not config fields):
 
@@ -187,6 +198,31 @@ class UMapConfig:
     tier_promote_heat: float = 2.0           # UMAP_TIER_PROMOTE_HEAT
     tier_max_migrations: int = 8             # UMAP_TIER_MAX_MIGRATIONS per cycle
 
+    # --- resilient I/O (DESIGN.md ยง17) --------------------------------------
+    # When True, umap() wraps the region's store in a ResilientStore
+    # (per-tier for TieredStore: each tier gets its own circuit breaker) and
+    # the pager's fill/write-back paths retry transient store errors with
+    # exponential backoff instead of raising on first failure.  A retry at
+    # the pager level re-plans tiered routing, which is the transparent
+    # fast-tier failover path while a breaker is open.  Default off: the
+    # PR 5 fail-fast contract (one injected fault == one surfaced IOError)
+    # is the debugging mode and what FaultyStore regression tests pin.
+    resilient_io: bool = False               # UMAP_RESILIENT_IO
+    io_retries: int = 3                      # UMAP_RETRY_LIMIT
+    retry_backoff_s: float = 0.002           # UMAP_RETRY_BACKOFF_MS / 1000
+    retry_max_backoff_s: float = 0.1         # UMAP_RETRY_MAX_BACKOFF_MS / 1000
+    retry_deadline_s: float = 2.0            # UMAP_RETRY_DEADLINE_MS / 1000
+    # CRC32 per page recorded at write-back/fill-install and verified on
+    # store reads; a mismatch surfaces as retriable CorruptPageError.
+    verify_reads: bool = False               # UMAP_VERIFY_READS
+    # Hedged reads: if a read has not completed within hedge_delay_s, issue
+    # a duplicate and take the first success (0 disables โ hedging only
+    # pays on high-latency remote tiers).
+    hedge_delay_s: float = 0.0               # UMAP_HEDGE_DELAY_MS / 1000
+    breaker_threshold: int = 5               # UMAP_BREAKER_THRESHOLD
+    breaker_reset_s: float = 0.5             # UMAP_BREAKER_RESET_MS / 1000
+    breaker_probes: int = 2                  # UMAP_BREAKER_PROBES
+
     # --- sharded concurrency (DESIGN.md ยง12) --------------------------------
     # Page metadata (table + slot free lists + eviction state) is striped
     # into `shards` independent lock domains keyed by hash(PageKey), so
@@ -246,6 +282,25 @@ class UMapConfig:
         if self.tier_max_migrations < 1:
             raise ValueError(
                 f"tier_max_migrations must be >= 1, got {self.tier_max_migrations}")
+        if self.io_retries < 0:
+            raise ValueError(f"io_retries must be >= 0, got {self.io_retries}")
+        if self.retry_backoff_s < 0 or self.retry_max_backoff_s < 0:
+            raise ValueError("retry backoffs must be >= 0")
+        if self.retry_deadline_s <= 0:
+            raise ValueError(
+                f"retry_deadline_s must be positive, got {self.retry_deadline_s}")
+        if self.hedge_delay_s < 0:
+            raise ValueError(
+                f"hedge_delay_s must be >= 0 (0 = off), got {self.hedge_delay_s}")
+        if self.breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {self.breaker_threshold}")
+        if self.breaker_reset_s <= 0:
+            raise ValueError(
+                f"breaker_reset_s must be positive, got {self.breaker_reset_s}")
+        if self.breaker_probes < 1:
+            raise ValueError(
+                f"breaker_probes must be >= 1, got {self.breaker_probes}")
 
     @property
     def num_slots(self) -> int:
@@ -329,6 +384,27 @@ class UMapConfig:
             kw["tier_promote_heat"] = float(env["UMAP_TIER_PROMOTE_HEAT"])
         if "UMAP_TIER_MAX_MIGRATIONS" in env:
             kw["tier_max_migrations"] = int(env["UMAP_TIER_MAX_MIGRATIONS"])
+        _truthy = ("1", "true", "yes", "on")
+        if "UMAP_RESILIENT_IO" in env:
+            kw["resilient_io"] = env["UMAP_RESILIENT_IO"].strip().lower() in _truthy
+        if "UMAP_RETRY_LIMIT" in env:
+            kw["io_retries"] = int(env["UMAP_RETRY_LIMIT"])
+        if "UMAP_RETRY_BACKOFF_MS" in env:
+            kw["retry_backoff_s"] = float(env["UMAP_RETRY_BACKOFF_MS"]) / 1000.0
+        if "UMAP_RETRY_MAX_BACKOFF_MS" in env:
+            kw["retry_max_backoff_s"] = float(env["UMAP_RETRY_MAX_BACKOFF_MS"]) / 1000.0
+        if "UMAP_RETRY_DEADLINE_MS" in env:
+            kw["retry_deadline_s"] = float(env["UMAP_RETRY_DEADLINE_MS"]) / 1000.0
+        if "UMAP_VERIFY_READS" in env:
+            kw["verify_reads"] = env["UMAP_VERIFY_READS"].strip().lower() in _truthy
+        if "UMAP_HEDGE_DELAY_MS" in env:
+            kw["hedge_delay_s"] = float(env["UMAP_HEDGE_DELAY_MS"]) / 1000.0
+        if "UMAP_BREAKER_THRESHOLD" in env:
+            kw["breaker_threshold"] = int(env["UMAP_BREAKER_THRESHOLD"])
+        if "UMAP_BREAKER_RESET_MS" in env:
+            kw["breaker_reset_s"] = float(env["UMAP_BREAKER_RESET_MS"]) / 1000.0
+        if "UMAP_BREAKER_PROBES" in env:
+            kw["breaker_probes"] = int(env["UMAP_BREAKER_PROBES"])
         kw.update(overrides)
         return cls(**kw)
 

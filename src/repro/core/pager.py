@@ -82,8 +82,10 @@ from __future__ import annotations
 import contextlib
 import os
 import queue
+import random
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, TYPE_CHECKING
@@ -115,7 +117,7 @@ _SHARD_COUNTERS = (
     "coalesced_pages", "lock_contended", "fill_stalls",
     "coalesced_writebacks", "writeback_pages", "leases",
     "lease_blocked_evictions", "io_errors", "writeback_errors",
-    "quarantined_pages",
+    "quarantined_pages", "quarantine_retries",
 )
 
 # Service-level counters: each has a single writer thread (watermark
@@ -154,7 +156,8 @@ class ServiceStats:
     lease_blocked_evictions: int = 0  # victim/clean skips due to live leases
     io_errors: int = 0              # fills that died on a store exception (§14.4)
     writeback_errors: int = 0       # failed write-back attempts (§14.4)
-    quarantined_pages: int = 0      # pages quarantined after retry exhaustion
+    quarantined_pages: int = 0      # currently quarantined (§17.4 re-post decrements)
+    quarantine_retries: int = 0     # quarantined pages re-posted for cleaning (§17)
     pattern_transitions: int = 0    # classifier-driven retunes applied
     tier_promotions: int = 0        # extents migrated into the fast tier (§14)
     tier_demotions: int = 0         # extents migrated out of the fast tier
@@ -259,6 +262,13 @@ class PagingService:
         self._classifiers: Dict[int, AccessPatternClassifier] = {}
         self._next_region_id = 0
         self._closed = False
+        # Worker threads close() could not join within its deadline (their
+        # store call outlived the bounded join — DESIGN.md §17.7).  They are
+        # daemons; the list makes the leak loud and testable.
+        self.leaked_threads: List[str] = []
+        # Breaker listeners installed per region (removed at unregister):
+        # region_id -> [(breaker, fn), ...].
+        self._breaker_hooks: Dict[int, List] = {}
 
         # Telemetry opt-in state (DESIGN.md §15): None until
         # register_telemetry() runs — zero overhead when unused.  Holds
@@ -418,20 +428,37 @@ class PagingService:
 
     def _register_tier_collector(self, region: "UMapRegion",
                                  rid: int) -> None:
-        """Add a tiering collector for a tiered region's store (once per
-        distinct store object; no-op unless telemetry is enabled)."""
-        if self._telemetry is None or not getattr(region, "tiered", False):
+        """Add per-store collectors for a region (once per distinct store
+        object; no-op unless telemetry is enabled): a tiering collector for
+        a TieredStore, plus one resilience collector per ResilientStore
+        reachable from the region's store (the store itself, or each
+        wrapped tier — DESIGN.md §17.8)."""
+        if self._telemetry is None:
             return
-        from ..telemetry.collectors import TieringCollector
+        from ..telemetry.collectors import ResilienceCollector, TieringCollector
+        store = region.store
+        resilient = [
+            (tag, s) for tag, s in
+            (("", store), ("/fast", getattr(store, "fast", None)),
+             ("/slow", getattr(store, "slow", None)))
+            if hasattr(s, "resilience_stats")
+        ]
+        if not getattr(region, "tiered", False) and not resilient:
+            return
         with self.lock:
             if self._telemetry is None:
                 return
             reg, label, names, seen_stores = self._telemetry
-            if id(region.store) in seen_stores:
-                return
-            seen_stores.add(id(region.store))
-            names.append(reg.register(TieringCollector(
-                region.store, label=f"{label}/r{rid}")))
+            if getattr(region, "tiered", False) and id(store) not in seen_stores:
+                seen_stores.add(id(store))
+                names.append(reg.register(TieringCollector(
+                    store, label=f"{label}/r{rid}")))
+            for tag, s in resilient:
+                if id(s) in seen_stores:
+                    continue
+                seen_stores.add(id(s))
+                names.append(reg.register(ResilienceCollector(
+                    s, label=f"{label}/r{rid}{tag}")))
 
     def unregister_telemetry(self) -> None:
         with self.lock:
@@ -463,7 +490,30 @@ class PagingService:
                 self._tier_thread = t
                 t.start()
         self._register_tier_collector(region, rid)
+        self._install_breaker_hooks(region, rid)
         return rid
+
+    def _install_breaker_hooks(self, region: "UMapRegion", rid: int) -> None:
+        """Auto-recovery wiring (DESIGN.md §17.4): when a breaker on this
+        region's store transitions back to CLOSED, quarantined pages get a
+        fresh write-back budget — the store that failed them has provably
+        recovered.  Listeners fire from I/O threads holding no shard locks
+        (breaker transitions happen in ResilientStore._call, outside all
+        pager locks), so the repost below respects the lock order."""
+        from .resilient import iter_breakers
+        hooks = []
+        for br in iter_breakers(region.store):
+            def on_edge(old, new, _region=region):
+                if new == "closed" and not _region._closing:
+                    try:
+                        self.retry_quarantined(_region)
+                    except Exception:   # noqa: BLE001 — recovery is best-effort
+                        pass
+            br.add_listener(on_edge)
+            hooks.append((br, on_edge))
+        if hooks:
+            with self.lock:
+                self._breaker_hooks[rid] = hooks
 
     def unregister(self, region: "UMapRegion") -> None:
         # Closing gate FIRST: new faults raise, queued fills are abandoned by
@@ -482,14 +532,28 @@ class PagingService:
             with self.lock:
                 self._regions.pop(region.region_id, None)
                 self._classifiers.pop(region.region_id, None)
+                hooks = self._breaker_hooks.pop(region.region_id, [])
+            for br, fn in hooks:
+                br.remove_listener(fn)
 
-    def close(self) -> None:
+    def close(self, join_timeout_s: float = 5.0) -> None:
+        """Flush and stop the worker pools.
+
+        ``join_timeout_s`` bounds BOTH the per-region flush drain and the
+        worker joins: a store call stalled past the deadline (dead remote
+        tier, ChaosStore latency spike) must not wedge shutdown.  Workers
+        that outlive the bounded join are daemon threads — they are
+        *leaked*, recorded in :attr:`leaked_threads`, and reported with a
+        loud ``UserWarning`` naming each thread (DESIGN.md §17.7); the seed
+        silently returned with the filler still blocked in the store.
+        """
         if self._closed:
             return
         quarantine_err: Optional[BaseException] = None
+        deadline = time.monotonic() + join_timeout_s
         for region in list(self._regions.values()):
             try:
-                self.flush_region(region, evict=False)
+                self.flush_region(region, evict=False, deadline=deadline)
             except IOError as e:
                 # Best-effort shutdown: quarantined pages cannot be
                 # persisted, but the worker pools must still come down.
@@ -506,9 +570,20 @@ class PagingService:
             self._tier_stop = True
             with self._tier_cv:
                 self._tier_cv.notify_all()
-            self._tier_thread.join(timeout=5.0)
+            self._tier_thread.join(timeout=join_timeout_s)
         for t in self._fillers + self._evictors:
-            t.join(timeout=5.0)
+            t.join(timeout=max(0.0, deadline - time.monotonic()) or 0.05)
+        leaked = [t for t in self._fillers + self._evictors if t.is_alive()]
+        if self._tier_thread is not None and self._tier_thread.is_alive():
+            leaked.append(self._tier_thread)
+        if leaked:
+            self.leaked_threads.extend(t.name for t in leaked)
+            warnings.warn(
+                f"PagingService.close timed out after {join_timeout_s:.1f}s "
+                f"waiting for in-flight store I/O; leaked daemon worker "
+                f"thread(s): {', '.join(t.name for t in leaked)} — their "
+                f"store calls are still running and will be abandoned",
+                UserWarning, stacklevel=2)
         self.unregister_telemetry()
         if quarantine_err is not None:
             raise quarantine_err
@@ -1302,6 +1377,36 @@ class PagingService:
                 shard.free.append(slot)
                 shard.cond.notify_all()
 
+    def _io_retry(self, op):
+        """Route a store call through the retry policy (DESIGN.md §17.3).
+
+        With ``config.resilient_io`` the fill/write-back paths no longer
+        raise on first failure: transient errors (see
+        ``resilient.default_classify``) retry with exponential backoff +
+        jitter under ``retry_deadline_s``.  Crucially this includes
+        ``BreakerOpenError`` from a wrapped tier — a retry *re-plans* the
+        tiered routing, which is the transparent fast-tier failover path
+        while a breaker is open.  Off (the default): the PR 5 fail-fast
+        contract is unchanged.
+        """
+        cfg = self.config
+        if not cfg.resilient_io:
+            return op()
+        from .resilient import default_classify
+        deadline = time.monotonic() + cfg.retry_deadline_s
+        sleep = cfg.retry_backoff_s
+        attempt = 0
+        while True:
+            try:
+                return op()
+            except Exception as exc:        # noqa: BLE001 — classified below
+                attempt += 1
+                if (not default_classify(exc) or attempt > cfg.io_retries
+                        or time.monotonic() + sleep >= deadline):
+                    raise
+                time.sleep(sleep * (1.0 + 0.5 * random.random()))
+                sleep = min(sleep * 2, cfg.retry_max_backoff_s)
+
     # ------------------------------------------ fill resolution (read path)
 
     def _do_fill_batch(self, region: "UMapRegion", entries: List[PageEntry],
@@ -1334,8 +1439,8 @@ class PagingService:
         # exception fails the whole run: slots go back to their shards and
         # every fault waiter raises IOError (DESIGN.md §14.4).
         try:
-            region.store.read_into_batch(
-                entries[0].key[1] * region.page_size, bufs)
+            self._io_retry(lambda: region.store.read_into_batch(
+                entries[0].key[1] * region.page_size, bufs))
         except Exception as exc:
             self._release_fill_slots(zip(entries, slots))
             self._fail_fills(entries, exc)
@@ -1382,8 +1487,8 @@ class PagingService:
             if region.fill_callback is not None:
                 region.fill_callback(entry.key[1], buf[:nbytes])
             else:
-                region.store.read_into(
-                    entry.key[1] * region.page_size, buf[:nbytes])
+                self._io_retry(lambda: region.store.read_into(
+                    entry.key[1] * region.page_size, buf[:nbytes]))
         except Exception as exc:
             self._release_fill_slots([(entry, slot)])
             self._fail_fills([entry], exc)
@@ -1585,10 +1690,11 @@ class PagingService:
         bufs = [self.buffer.slot_view(e.slot, region.page_nbytes(e.key[1]))
                 for e in run]
         if len(run) == 1:
-            region.store.write_from(run[0].key[1] * region.page_size, bufs[0])
+            self._io_retry(lambda: region.store.write_from(
+                run[0].key[1] * region.page_size, bufs[0]))
         else:
-            region.store.write_from_batch(
-                run[0].key[1] * region.page_size, bufs)
+            self._io_retry(lambda: region.store.write_from_batch(
+                run[0].key[1] * region.page_size, bufs))
 
     def _evictor_loop(self, worker_id: int) -> None:
         # Opportunistic batch drain: after blocking on the first item, pull
@@ -1791,13 +1897,21 @@ class PagingService:
 
     # -------------------------------------------------------------- flush
 
-    def flush_region(self, region: "UMapRegion", evict: bool = False) -> None:
+    def flush_region(self, region: "UMapRegion", evict: bool = False,
+                     deadline: Optional[float] = None) -> None:
         """Synchronously write back all dirty pages of a region (§3.5).
 
         With ``evict=True`` also drops the pages (uunmap path).  Loops until
         no page of the region is dirty/resident (evict) and none is in
         flight — combined with the region's closing gate this guarantees no
         fill can re-install a page after an unregister flush returns.
+
+        ``deadline`` (``time.monotonic()`` value, close path only) bounds
+        the in-flight drain: a FILLING page whose store call is stalled
+        would otherwise spin this loop forever.  Past the deadline the
+        drain gives up on *in-flight* pages with a warning (dirty PRESENT
+        pages were already batched out — no silent durability loss beyond
+        what the stall itself implies).
 
         Quarantined pages (write-back retries exhausted, §14.4) cannot be
         persisted: they are skipped by the drain and reported by raising
@@ -1826,6 +1940,12 @@ class PagingService:
             if not batch:
                 if not pending:
                     break
+                if deadline is not None and time.monotonic() >= deadline:
+                    warnings.warn(
+                        f"flush of region {region.name or region.region_id} "
+                        f"abandoned in-flight pages at the close deadline "
+                        f"(stalled store I/O)", UserWarning, stacklevel=2)
+                    break
                 time.sleep(0.001)
                 continue
             # Adjacent dirty pages drain as single write_from_batch calls —
@@ -1846,7 +1966,65 @@ class PagingService:
                 f"{len(quarantined)} quarantined dirty page(s) "
                 f"(write-back retries exhausted): {sorted(quarantined)[:8]}")
 
+    def retry_quarantined(self, region: Optional["UMapRegion"] = None) -> int:
+        """Re-post quarantined pages to the cleaner queue with a fresh
+        retry budget (DESIGN.md §17.4).
+
+        Quarantined pages (write-back retries exhausted, §14.4) are stuck
+        by design until the operator — or the store's own circuit breaker
+        transitioning open → closed, which auto-invokes this — declares the
+        store healthy again.  Each re-posted page gets the full
+        ``config.writeback_retries`` budget; pages that fail again simply
+        re-quarantine.  Restricted to ``region`` when given, else every
+        registered region.  Returns the number of pages re-posted;
+        ``quarantine_retries`` counts them cumulatively, and
+        ``quarantined_pages`` — a gauge of *currently* quarantined pages —
+        drops by one per re-post (a page that fails write-back again
+        simply re-quarantines and bumps it back).
+        """
+        with self.lock:
+            if region is not None:
+                rids = [region.region_id]
+            else:
+                rids = list(self._regions)
+        repost: List[PageEntry] = []
+        for shard in self.shards:
+            with self._locked(shard):
+                for rid in rids:
+                    for e in shard.table.region_entries(rid):
+                        if not (e.quarantined and e.state is PageState.PRESENT
+                                and e.pins == 0 and e.dirty):
+                            continue
+                        e.quarantined = False
+                        e.wb_retries = 0
+                        e.state = PageState.CLEANING
+                        e.event.clear()
+                        shard.counters["quarantine_retries"] += 1
+                        shard.counters["quarantined_pages"] -= 1
+                        repost.append(e)
+        for e in repost:
+            self._clean_q.put(("clean", e))
+        return len(repost)
+
     # ------------------------------------------------------------- queries
+
+    def open_breakers(self) -> int:
+        """Number of OPEN circuit breakers across registered regions'
+        stores — the serve engine's degraded-paging signal (DESIGN.md
+        §17.9).  Lock-free scrape: breaker state is a GIL-atomic attribute
+        read; a racing registration just defers to the next poll."""
+        from .resilient import iter_breakers
+        try:
+            regions = list(self._regions.values())
+        except RuntimeError:            # dict mutated mid-iteration
+            return 0
+        seen, n = set(), 0
+        for r in regions:
+            for br in iter_breakers(r.store):
+                if id(br) not in seen:
+                    seen.add(id(br))
+                    n += br.state == "open"
+        return n
 
     def dirty_ratio(self) -> float:
         return self.table.dirty_count / max(1, self.buffer.num_slots)

@@ -39,6 +39,14 @@ class UMapRegion:
         name: str = "",
     ):
         cfg = service.config
+        if cfg.resilient_io:
+            # Resilience composition (DESIGN.md §17.5): tiered stores wrap
+            # per tier (one breaker each — a tripped fast tier must not gate
+            # the slow tier), everything else wraps whole.  Done before the
+            # tiered check below, which wrap_store preserves (TieredStore
+            # identity is kept; only its tiers are replaced in place).
+            from .resilient import wrap_store
+            store = wrap_store(store, cfg)
         self.store = store
         self.service = service
         self.page_size = int(page_size or cfg.page_size)

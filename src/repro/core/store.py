@@ -627,6 +627,7 @@ class TieredStore(BackingStore):
         self.promotions = 0
         self.demotions = 0
         self.migration_aborts = 0
+        self.tier_failovers = 0      # clean extents degraded off a dead fast tier
         self.fast_bytes_read = 0
         self.slow_bytes_read = 0
         self.reset_stats()
@@ -693,6 +694,7 @@ class TieredStore(BackingStore):
                 "promotions": self.promotions,
                 "demotions": self.demotions,
                 "migration_aborts": self.migration_aborts,
+                "tier_failovers": self.tier_failovers,
                 "fast_bytes_read": self.fast_bytes_read,
                 "slow_bytes_read": self.slow_bytes_read,
             }
@@ -715,6 +717,19 @@ class TieredStore(BackingStore):
 
     # ------------------------------------------------------- segment routing
 
+    def _fast_down(self) -> bool:
+        """True while the fast tier's circuit breaker (if any — duck-typed
+        onto a ResilientStore-wrapped tier, DESIGN.md §17.5) is tripped:
+        OPEN with its reset window not yet elapsed.  Once the window
+        passes this goes False so reads/promotes resume sending (probe)
+        traffic to fast — routing on the raw OPEN state instead would
+        starve the breaker of the very probes that let it recover."""
+        br = getattr(self.fast, "breaker", None)
+        if br is None:
+            return False
+        tripped = getattr(br, "tripped", None)
+        return tripped() if tripped is not None else br.state == "open"
+
     def _plan_locked(self, offset: int, length: int, write: bool):
         """Route ``[offset, offset+length)`` to per-tier segments and pin
         the touched extents (``self._lock`` held).
@@ -722,20 +737,46 @@ class TieredStore(BackingStore):
         Returns ``(segments, extents)`` where each segment is ``(store,
         dev_off, buf_off, n)``.  Pins block demotion — the one migration
         step that would invalidate fast-tier bytes under an in-flight op.
+
+        Degraded mode: while the fast tier's breaker is open, CLEAN resident
+        extents fail over to the slow tier — safe because clean means the
+        write-back invariant holds (fast bytes == slow bytes) and the
+        transactional promote/demote protocol never leaves a byte only in a
+        staging copy.  Unpinned clean extents also drop residency so the
+        slot is free for re-admission when the breaker recovers.  DIRTY
+        resident extents keep routing to (and failing against) the fast
+        tier: their fast bytes are the *only* copy, so serving slow would
+        be silent staleness — the error instead propagates to the pager,
+        whose retry/quarantine path keeps the page buffer copy authoritative.
         """
         segs: List[Tuple[BackingStore, int, int, int]] = []
         exts: List[int] = []
         pos = offset
         end = offset + length
+        fast_down = self._fast_down()
         while pos < end:
             ext = pos // self.extent_size
             hi = min(end, (ext + 1) * self.extent_size)
             n = hi - pos
-            self._pins[ext] = self._pins.get(ext, 0) + 1
+            pins_before = self._pins.get(ext, 0)
+            self._pins[ext] = pins_before + 1
             if write:
                 self._wpins[ext] = self._wpins.get(ext, 0) + 1
             exts.append(ext)
             slot = self._slot.get(ext)
+            if slot is not None and fast_down and ext not in self._dirty:
+                if pins_before == 0 and self._wpins.get(ext, 0) <= (1 if write else 0):
+                    # No concurrent op routed to this slot: drop the (clean,
+                    # redundant) residency so this op and all successors use
+                    # the live slow tier and the slot is reclaimable.
+                    del self._slot[ext]
+                    self._free.append(slot)
+                    self.tier_failovers += 1
+                    slot = None
+                elif not write:
+                    # Slot busy under concurrent pins — leave residency, but
+                    # serve this read from slow (clean => identical bytes).
+                    slot = None
             if slot is not None:
                 dev = slot * self.extent_size + (pos - ext * self.extent_size)
                 segs.append((self.fast, dev, pos - offset, n))
@@ -861,6 +902,9 @@ class TieredStore(BackingStore):
         """
         if not 0 <= ext < self.num_extents:
             return False
+        if self._fast_down():
+            return False     # no admissions into a tripped tier; half-open
+            #                  probes re-enable promotion (re-admission path)
         nbytes = self._extent_nbytes(ext)
         with self._lock:
             if ext in self._slot or not self._free:

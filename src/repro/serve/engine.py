@@ -104,6 +104,14 @@ class EngineConfig:
     est_step_s: float = 5e-3            # EWMA seeds (replaced by measurement)
     est_prefill_s: float = 20e-3
     max_restarts: int = 8               # requeue bound before a request expires
+    # --- degraded-mode admission (DESIGN.md §17.9) -------------------------
+    # While the paging service reports an open circuit breaker, service-time
+    # estimates are scaled by degrade_multiplier (degraded paging stretches
+    # every fill) and — with degrade_shed — deadline requests that cannot
+    # meet their SLO under the scaled estimate are shed at admission instead
+    # of admitted only to time out holding a lane.
+    degrade_multiplier: float = 3.0
+    degrade_shed: bool = True
 
 
 @dataclasses.dataclass
@@ -122,12 +130,12 @@ class PrefixEntry:
 
 _TENANT_KEYS = ("prefills", "evictions", "requeues", "admission_pauses",
                 "slo_deferrals", "slo_misses", "expired", "finished",
-                "tokens_generated")
+                "tokens_generated", "shed_requests")
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: dict, ecfg: EngineConfig,
-                 prefix_region=None):
+                 prefix_region=None, paging_service=None):
         assert not cfg.is_encdec and cfg.input_mode == "tokens", \
             "engine demo targets decoder-only token models"
         self.cfg = cfg
@@ -152,12 +160,17 @@ class ServeEngine:
         self._prefixes: Dict[Tuple[int, ...], PrefixEntry] = {}
         self._next_prefix_seq = -2          # -1 is the scratch pseudo-seq
         self.prefix_region = prefix_region  # optional UMapRegion (tier pins)
+        # Degraded-state source (DESIGN.md §17.9): an explicit paging
+        # service, else the prefix region's — duck-typed; None disables.
+        self._paging_service = (paging_service if paging_service is not None
+                                else getattr(prefix_region, "service", None))
         self._region_cursor = 0
         self._est_step_s = ecfg.est_step_s
         self._est_prefill_s = ecfg.est_prefill_s
         self.stats = {"steps": 0, "prefills": 0, "evictions": 0,
                       "requeues": 0, "admission_pauses": 0,
                       "slo_deferrals": 0, "slo_misses": 0, "expired": 0,
+                      "shed_requests": 0,
                       "victim_evictions": 0, "cow_copies": 0,
                       "shared_pages_mapped": 0, "prefix_hits": 0,
                       "prefix_drops": 0, "peak_pages_used": 0,
@@ -369,20 +382,40 @@ class ServeEngine:
             self._tstats(name)["admission_pauses"] += 1
         return not paused
 
-    def _slo_defer(self, req: Request, now: float) -> bool:
+    def paging_degraded(self) -> bool:
+        """True while the paging service backing this engine reports an
+        open circuit breaker (DESIGN.md §17.9).  Duck-typed + defensive:
+        the degradation probe must never take the engine down."""
+        svc = self._paging_service
+        if svc is None:
+            return False
+        try:
+            return svc.open_breakers() > 0
+        except Exception:       # noqa: BLE001 — health probe is best-effort
+            return False
+
+    def _service_est_s(self, req: Request, degraded: bool) -> float:
+        est = self._est_prefill_s + req.max_new_tokens * self._est_step_s
+        if degraded:
+            est *= self.ecfg.degrade_multiplier
+        return est
+
+    def _slo_defer(self, req: Request, now: float,
+                   degraded: bool = False) -> bool:
         """Deadline-headroom admission (not binary occupancy): defer a
         request whose estimated service time exceeds its remaining budget
         while feasible work waits.  Requests whose deadline already passed
         are NOT deferred (nothing is saved) and requests are never starved:
         the relaxed admission pass admits deferred requests into idle lanes.
+        While the paging service is degraded, estimates carry the
+        degradation multiplier — circuit-open paging stretches every fill.
         """
         if not self.ecfg.slo_admission or req.deadline_s is None:
             return False
         head = deadline_headroom_s(req.deadline_s, req.submitted_at, now)
         if head <= 0:
             return False
-        est = self._est_prefill_s + req.max_new_tokens * self._est_step_s
-        return est * self.ecfg.slo_safety > head
+        return self._service_est_s(req, degraded) * self.ecfg.slo_safety > head
 
     def _admit_key(self, now: float):
         def key(req: Request):
@@ -402,6 +435,7 @@ class ServeEngine:
         skips SLO-infeasible requests; pass 2 relaxes that so idle lanes are
         never wasted and no request starves."""
         now = time.time()
+        degraded = self.paging_degraded()
         remaining = self.waiting
         # reclaim during admission can evict+requeue a live victim, which
         # appends to self.waiting — keep that list separate so the victim
@@ -412,11 +446,22 @@ class ServeEngine:
                 break
             keep: List[Request] = []
             for req in sorted(remaining, key=self._admit_key(now)):
+                if (degraded and self.ecfg.degrade_shed
+                        and req.deadline_s is not None
+                        and self._service_est_s(req, degraded)
+                        * self.ecfg.slo_safety
+                        > deadline_headroom_s(req.deadline_s,
+                                              req.submitted_at, now)):
+                    # Degraded paging: a request that cannot meet its SLO
+                    # under the scaled estimate is shed now, not admitted
+                    # to a lane it would hold until it times out.
+                    self._shed(req, now)
+                    continue
                 if not self._free_lanes or not self._watermark_gate() \
                         or not self._tenant_gate(req.tenant):
                     keep.append(req)
                     continue
-                if not relax_slo and self._slo_defer(req, now):
+                if not relax_slo and self._slo_defer(req, now, degraded):
                     self.stats["slo_deferrals"] += 1
                     self._tstats(req.tenant)["slo_deferrals"] += 1
                     keep.append(req)
@@ -732,6 +777,22 @@ class ServeEngine:
         self._free_lanes.append(lane)
         self.seq_len.pop(rid, None)
         self._finish(self.active.pop(rid))
+
+    def _shed(self, req: Request, now: float) -> None:
+        """Retire a request at admission under degraded paging
+        (DESIGN.md §17.9): marked expired + slo_miss, counted in
+        ``shed_requests`` (NOT ``expired`` — that counter means restart
+        exhaustion), and moved to ``finished`` so the caller's drain loop
+        observes it terminally instead of waiting out a doomed timeout."""
+        req.expired = True
+        req.slo_miss = True
+        req.finished_at = now
+        self.stats["shed_requests"] += 1
+        self.stats["slo_misses"] += 1
+        ts = self._tstats(req.tenant)
+        ts["shed_requests"] += 1
+        ts["slo_misses"] += 1
+        self.finished.append(req)
 
     def _finish(self, req: Request) -> None:
         req.finished_at = time.time()

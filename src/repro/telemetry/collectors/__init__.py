@@ -10,6 +10,7 @@ from .base import Collector
 from .leases import LeaseCollector
 from .pager import PagerCollector
 from .process import ProcessCollector
+from .resilience import ResilienceCollector
 from .serve import ServeCollector
 from .tiering import TieringCollector
 
@@ -18,6 +19,7 @@ __all__ = [
     "LeaseCollector",
     "PagerCollector",
     "ProcessCollector",
+    "ResilienceCollector",
     "ServeCollector",
     "TieringCollector",
 ]

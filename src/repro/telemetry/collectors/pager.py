@@ -53,8 +53,8 @@ _COUNTERS = (
      "Fills that died on a backing-store exception"),
     ("writeback_errors", "umap_pager_writeback_errors_total",
      "Failed write-back attempts (incl. retries)"),
-    ("quarantined_pages", "umap_pager_quarantined_pages_total",
-     "Pages quarantined after write-back retry exhaustion"),
+    ("quarantine_retries", "umap_pager_quarantine_retries_total",
+     "Quarantined pages re-posted for cleaning with a fresh retry budget"),
     ("pattern_transitions", "umap_pager_pattern_transitions_total",
      "Classifier-driven retunes applied"),
     ("tier_promotions", "umap_pager_tier_promotions_total",
@@ -74,8 +74,8 @@ _PER_SHARD = (
      "Contended lock acquisitions per metadata shard"),
     ("fill_stalls", "umap_pager_shard_fill_stalls_total",
      "Backpressure stalls per metadata shard"),
-    ("quarantined_pages", "umap_pager_shard_quarantined_pages_total",
-     "Quarantined pages per metadata shard"),
+    ("quarantined_pages", "umap_pager_shard_quarantined_pages",
+     "Currently quarantined pages per metadata shard"),
 )
 
 
@@ -92,7 +92,9 @@ class PagerCollector(Collector):
         fams = [self.c1(mname, help_, snap[key])
                 for key, mname, help_ in _COUNTERS]
         for key, mname, help_ in _PER_SHARD:
-            fam = self.counter(mname, help_)
+            # quarantined_pages can fall again on re-post (§17.4): gauge.
+            mk = self.gauge if key == "quarantined_pages" else self.counter
+            fam = mk(mname, help_)
             for i, shard in enumerate(snap["per_shard"]):
                 fam.add(shard[key], shard=i)
             fams.append(fam)
@@ -108,6 +110,10 @@ class PagerCollector(Collector):
                     "High-water mark of queued fill work", snap["fill_queue_peak"]),
             self.g1("umap_pager_dirty_ratio",
                     "Dirty pages / buffer slots", svc.dirty_ratio()),
+            self.g1("umap_pager_quarantined_pages",
+                    "Pages currently quarantined (write-back retries "
+                    "exhausted, awaiting retry_quarantined)",
+                    snap["quarantined_pages"]),
             self.g1("umap_pager_buffer_slots",
                     "Page-buffer slot count", svc.buffer.num_slots),
             self.g1("umap_pager_page_size_bytes",

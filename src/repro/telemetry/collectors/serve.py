@@ -42,6 +42,8 @@ _ENGINE_COUNTERS = (
      "Admissions that matched a registered prompt prefix"),
     ("prefix_drops", "umap_serve_prefix_drops_total",
      "Registered prefixes dropped (reclaim or explicit)"),
+    ("shed_requests", "umap_serve_shed_total",
+     "Requests shed at admission under degraded paging (DESIGN.md §17.9)"),
 )
 
 #: per-tenant stats keys exported with a ``tenant`` label (DESIGN.md §16.6);
@@ -61,6 +63,8 @@ _TENANT_COUNTERS = (
      "Per-tenant deadline misses"),
     ("expired", "umap_serve_tenant_expired_total",
      "Per-tenant expired requests"),
+    ("shed_requests", "umap_serve_tenant_shed_requests_total",
+     "Per-tenant requests shed under degraded paging"),
     ("finished", "umap_serve_tenant_finished_total",
      "Per-tenant retired requests"),
     ("tokens_generated", "umap_serve_tenant_tokens_generated_total",
@@ -120,6 +124,9 @@ class ServeCollector(Collector):
                         st.get("peak_pages_used", 0)),
                 self.g1("umap_serve_tenants",
                         "Registered tenants", len(getattr(eng, "tenants", ()))),
+                self.g1("umap_serve_paging_degraded",
+                        "1 while any paging-store circuit breaker is OPEN",
+                        int(getattr(eng, "paging_degraded", bool)())),
             ]
             per_tenant = st.get("per_tenant") or {}
             if per_tenant:

@@ -422,3 +422,104 @@ def test_serve_collector_parity_after_drained_run(model):
         want = {t: float(st[key])
                 for t, st in eng.stats["per_tenant"].items()}
         assert got == want, (key, fam)
+
+
+# ------------------------------------------ degraded-mode admission (§17.9)
+
+
+class _DegradedPagingSvc:
+    """Duck-typed paging service: only what paging_degraded() probes."""
+
+    def __init__(self):
+        self.open = 0
+
+    def open_breakers(self):
+        return self.open
+
+
+def _mk_deadline_req(cfg, rng, rid, deadline_s):
+    return Request(rid=rid,
+                   prompt=rng.integers(1, cfg.vocab_size, 5).astype(np.int32),
+                   max_new_tokens=2, deadline_s=deadline_s)
+
+
+def test_degraded_paging_sheds_infeasible_deadlines(model):
+    """While the paging service reports an open breaker, service-time
+    estimates carry degrade_multiplier: a deadline that is feasible when
+    healthy (est 3 s < 10 s) becomes infeasible degraded (est 30 s) and is
+    shed at admission — retired terminally via shed_requests, never
+    counted as restart exhaustion."""
+    cfg, params = model
+    ecfg = EngineConfig(max_batch=2, page_size=4, num_pages=64,
+                        max_pages_per_seq=16, prefill_bucket=8,
+                        est_step_s=1.0, est_prefill_s=1.0, slo_safety=1.0,
+                        degrade_multiplier=10.0)
+    svc = _DegradedPagingSvc()
+    eng = ServeEngine(cfg, params, ecfg, paging_service=svc)
+    rng = np.random.default_rng(23)
+    req = _mk_deadline_req(cfg, rng, 0, deadline_s=10.0)
+    svc.open = 1
+    assert eng.paging_degraded() is True
+    eng.submit(req)
+    eng.step()
+    assert eng.stats["shed_requests"] == 1
+    assert eng.stats["per_tenant"]["default"]["shed_requests"] == 1
+    assert req.expired and req.slo_miss and req in eng.finished
+    assert eng.stats["expired"] == 0, "shed is not restart exhaustion"
+    assert_none_lost(eng, [req])
+
+
+def test_healthy_paging_admits_same_deadline(model):
+    """The identical request sails through admission when no breaker is
+    open — the degraded multiplier must not leak into the healthy path."""
+    cfg, params = model
+    ecfg = EngineConfig(max_batch=2, page_size=4, num_pages=64,
+                        max_pages_per_seq=16, prefill_bucket=8,
+                        est_step_s=1.0, est_prefill_s=1.0, slo_safety=1.0,
+                        degrade_multiplier=10.0)
+    svc = _DegradedPagingSvc()
+    eng = ServeEngine(cfg, params, ecfg, paging_service=svc)
+    rng = np.random.default_rng(23)
+    req = _mk_deadline_req(cfg, rng, 0, deadline_s=10.0)
+    eng.submit(req)
+    eng.run_until_drained(max_steps=200)
+    assert eng.stats["shed_requests"] == 0
+    assert req.done and not req.expired
+    assert_none_lost(eng, [req])
+
+
+def test_degrade_shed_opt_out_keeps_request(model):
+    """degrade_shed=False: the degraded estimate may defer the request but
+    never sheds it — it still retires through the normal lifecycle."""
+    cfg, params = model
+    ecfg = EngineConfig(max_batch=2, page_size=4, num_pages=64,
+                        max_pages_per_seq=16, prefill_bucket=8,
+                        est_step_s=1.0, est_prefill_s=1.0, slo_safety=1.0,
+                        degrade_multiplier=10.0, degrade_shed=False)
+    svc = _DegradedPagingSvc()
+    eng = ServeEngine(cfg, params, ecfg, paging_service=svc)
+    svc.open = 1
+    rng = np.random.default_rng(23)
+    req = _mk_deadline_req(cfg, rng, 0, deadline_s=10.0)
+    eng.submit(req)
+    eng.run_until_drained(max_steps=200)
+    assert eng.stats["shed_requests"] == 0
+    assert req.done or req.expired       # retired, never silently dropped
+    assert_none_lost(eng, [req])
+
+
+def test_paging_degraded_probe_is_defensive(model):
+    """A paging service whose health probe raises must read as healthy —
+    the degradation probe can never take the engine down."""
+    cfg, params = model
+    ecfg = EngineConfig(max_batch=1, page_size=4, num_pages=64,
+                        max_pages_per_seq=16, prefill_bucket=8)
+
+    class _Broken:
+        def open_breakers(self):
+            raise RuntimeError("probe exploded")
+
+    eng = ServeEngine(cfg, params, ecfg, paging_service=_Broken())
+    assert eng.paging_degraded() is False
+    eng2 = ServeEngine(cfg, params, ecfg)          # no service wired at all
+    assert eng2.paging_degraded() is False

@@ -27,6 +27,7 @@ from repro.telemetry.collectors import (
     LeaseCollector,
     PagerCollector,
     ProcessCollector,
+    ResilienceCollector,
     ServeCollector,
     TieringCollector,
 )
@@ -242,20 +243,21 @@ PAGER_COUNTERS = {
     "umap_pager_lock_contended_total", "umap_pager_steals_total",
     "umap_pager_stolen_work_total", "umap_pager_io_errors_total",
     "umap_pager_writeback_errors_total",
-    "umap_pager_quarantined_pages_total",
+    "umap_pager_quarantine_retries_total",
     "umap_pager_pattern_transitions_total",
     "umap_pager_tier_promotions_total", "umap_pager_tier_demotions_total",
     "umap_pager_tier_errors_total",
     "umap_pager_shard_demand_faults_total",
     "umap_pager_shard_lock_contended_total",
     "umap_pager_shard_fill_stalls_total",
-    "umap_pager_shard_quarantined_pages_total",
     "umap_pager_filler_fills_total",
 }
 PAGER_GAUGES = {
     "umap_pager_shards", "umap_pager_fill_queue_peak",
     "umap_pager_dirty_ratio", "umap_pager_buffer_slots",
     "umap_pager_page_size_bytes",
+    # quarantine population can shrink again on §17.4 re-post: gauges
+    "umap_pager_quarantined_pages", "umap_pager_shard_quarantined_pages",
 }
 
 
@@ -450,16 +452,19 @@ class _FakeEngine:
                       "victim_evictions": 2, "cow_copies": 5,
                       "shared_pages_mapped": 9, "prefix_hits": 6,
                       "prefix_drops": 1, "peak_pages_used": 7,
+                      "shed_requests": 2,
                       "per_tenant": {
                           "gold": {"prefills": 3, "evictions": 1,
                                    "requeues": 1, "admission_pauses": 0,
                                    "slo_deferrals": 2, "slo_misses": 1,
-                                   "expired": 0, "finished": 3,
+                                   "expired": 0, "shed_requests": 2,
+                                   "finished": 3,
                                    "tokens_generated": 24},
                           "bronze": {"prefills": 1, "evictions": 0,
                                      "requeues": 0, "admission_pauses": 2,
                                      "slo_deferrals": 1, "slo_misses": 0,
-                                     "expired": 0, "finished": 1,
+                                     "expired": 0, "shed_requests": 0,
+                                     "finished": 1,
                                      "tokens_generated": 8},
                       }}
         self.active = {1: object(), 2: object()}
@@ -486,6 +491,7 @@ SERVE_ENGINE_FAMILIES = {
     "umap_serve_cow_copies_total", "umap_serve_shared_pages_mapped_total",
     "umap_serve_prefix_hits_total", "umap_serve_prefix_drops_total",
     "umap_serve_peak_pages_used", "umap_serve_tenants",
+    "umap_serve_shed_total", "umap_serve_paging_degraded",
 }
 SERVE_TENANT_FAMILIES = {
     "umap_serve_tenant_prefills_total", "umap_serve_tenant_evictions_total",
@@ -493,6 +499,7 @@ SERVE_TENANT_FAMILIES = {
     "umap_serve_tenant_admission_pauses_total",
     "umap_serve_tenant_slo_deferrals_total",
     "umap_serve_tenant_slo_misses_total", "umap_serve_tenant_expired_total",
+    "umap_serve_tenant_shed_requests_total",
     "umap_serve_tenant_finished_total",
     "umap_serve_tenant_tokens_generated_total",
 }
@@ -814,3 +821,103 @@ class TestEnvAutostart:
         # service close() removed its collectors from the default registry
         assert not any(n.startswith("pager:")
                        for n in telemetry.default_registry().collector_names())
+
+
+# ------------------------------------------------------ ResilienceCollector
+
+
+RESILIENCE_COUNTERS = {
+    "umap_resilience_retries_total",
+    "umap_resilience_retries_ok_total",
+    "umap_resilience_retry_exhausted_total",
+    "umap_resilience_deadline_exceeded_total",
+    "umap_resilience_permanent_errors_total",
+    "umap_resilience_breaker_rejections_total",
+    "umap_resilience_hedges_total",
+    "umap_resilience_hedge_wins_total",
+    "umap_resilience_checksum_failures_total",
+    "umap_resilience_breaker_opens_total",
+    "umap_resilience_breaker_half_opens_total",
+    "umap_resilience_breaker_closes_total",
+}
+RESILIENCE_GAUGES = {
+    "umap_resilience_breaker_state",
+    "umap_resilience_degraded_seconds",
+}
+
+
+class TestResilienceCollector:
+    def _resilient_store(self):
+        from repro.core import ChaosStore, ResilientStore
+        chaos = ChaosStore(
+            HostArrayStore((np.arange(16 * PS) % 251).astype(np.uint8)),
+            seed=3)
+        from repro.core.resilient import CircuitBreaker, RetryPolicy
+        rs = ResilientStore(
+            chaos, policy=RetryPolicy(retries=2, backoff_s=1e-4,
+                                      max_backoff_s=1e-3),
+            breaker=CircuitBreaker(threshold=5, reset_s=60.0))
+        return rs, chaos
+
+    def test_exact_family_names_and_types(self):
+        rs, _ = self._resilient_store()
+        fams = families_of(ResilienceCollector(rs, label="s"))
+        assert set(fams) == RESILIENCE_COUNTERS | RESILIENCE_GAUGES
+        for name in RESILIENCE_COUNTERS:
+            assert fams[name].kind == "counter", name
+        for name in RESILIENCE_GAUGES:
+            assert fams[name].kind == "gauge", name
+
+    def test_values_track_store_stats(self):
+        rs, chaos = self._resilient_store()
+        chaos.fail_next("read", count=2)
+        rs.read_into(0, np.empty(PS, np.uint8))      # two retries absorbed
+        chaos.kill()
+        for _ in range(3):                           # trip the breaker
+            try:
+                rs.read_into(0, np.empty(PS, np.uint8))
+            except OSError:
+                pass
+        fams = families_of(ResilienceCollector(rs, label="s"))
+        snap = rs.resilience_stats()
+        # exact parity with the wrapper snapshot, plus the known landmarks
+        for key, mname in (("retries", "umap_resilience_retries_total"),
+                           ("retries_ok", "umap_resilience_retries_ok_total"),
+                           ("exhausted",
+                            "umap_resilience_retry_exhausted_total"),
+                           ("breaker_rejections",
+                            "umap_resilience_breaker_rejections_total"),
+                           ("breaker_opens",
+                            "umap_resilience_breaker_opens_total")):
+            assert fams[mname].samples[0][2] == snap[key], (key, mname)
+        assert snap["retries"] >= 2 and snap["retries_ok"] == 1
+        assert snap["breaker_opens"] == 1
+        assert fams["umap_resilience_breaker_state"].samples[0][2] == 2  # open
+        for _, labels, _ in fams["umap_resilience_retries_total"].samples:
+            assert labels["source"] == "s"
+        chaos.revive()
+
+    def test_autoregistered_for_resilient_flat_region(self):
+        reg = TelemetryRegistry()
+        r = make_region(resilient_io=True)
+        try:
+            names = r.service.register_telemetry(registry=reg, label="svc")
+            res_names = [n for n in names if n.startswith("resilience:")]
+            assert res_names == ["resilience:svc/r0"]
+            text = telemetry.render_registry(reg) \
+                if hasattr(telemetry, "render_registry") else reg.render()
+            assert "umap_resilience_retries_total" in text
+        finally:
+            uunmap(r)
+        assert reg.collector_names() == []           # close() unregistered
+
+    def test_autoregistered_per_tier(self):
+        reg = TelemetryRegistry()
+        r = make_region(tiered=True, resilient_io=True)
+        try:
+            names = r.service.register_telemetry(registry=reg, label="svc")
+            res_names = sorted(n for n in names if n.startswith("resilience:"))
+            assert res_names == ["resilience:svc/r0/fast",
+                                 "resilience:svc/r0/slow"]
+        finally:
+            uunmap(r)
