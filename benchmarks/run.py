@@ -15,6 +15,8 @@
               vs slow-tier-only (DESIGN.md §14)
   chaos       §17     scripted fault injection: throughput under faults,
               circuit-broken failover, time-to-recovery (DESIGN.md §17)
+  train_ooc   §18     out-of-core training: paged vs resident step time
+              at >=4x state oversubscription (DESIGN.md §18)
   fault_overhead  µs/fault microbenchmark feeding the PageSizeAdvisor
 
 Prints ``name,us_per_call,derived`` CSV and writes JSON rows under
@@ -85,6 +87,7 @@ SUITES = {
     "tiering": ("bench_tiering", "§3.4 tiered store"),
     "serve": ("bench_serve", "§16 serving"),
     "chaos": ("bench_chaos", "§17 resilience"),
+    "train_ooc": ("bench_train_ooc", "§18 OOC training"),
 }
 
 
@@ -150,6 +153,15 @@ def main(argv=None) -> int:
                           f"in {summary.extra['recovery_s']:.2f}s, "
                           f"{summary.extra['errors_surfaced']} errors "
                           f"surfaced", flush=True)
+            elif name == "train_ooc":            # paged-vs-resident witness
+                summary = next((r for r in rows if r.config == "summary"), None)
+                if summary:
+                    print(f"# {name} ({fig}): paged/resident step-time ratio "
+                          f"= {summary.extra['step_time_ratio']:.2f} at "
+                          f"{summary.extra['oversubscription']:.1f}x "
+                          f"oversubscription, readahead hit rate "
+                          f"{summary.extra['readahead_hit_rate']:.2f}",
+                          flush=True)
             elif name == "serve":                # sharing + isolation witness
                 summary = next((r for r in rows if r.config == "summary"), None)
                 if summary:

@@ -209,7 +209,14 @@ class AsyncCheckpointer:
         self.stats = {"saves": 0, "blocked_on_watermark": 0}
 
     def save_async(self, step: int, tree: PyTree) -> None:
-        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+        # Leaves exposing `snapshot_tree()` (pager-backed state: PagedTree /
+        # PagedOptimizerState, DESIGN.md §18.4) are materialized through it
+        # — a consistent-snapshot read that BLOCKS on in-flight write leases
+        # — instead of np.asarray, which would copy mid-mutation bytes.
+        host_tree = jax.tree.map(
+            lambda a: (jax.tree.map(np.asarray, a.snapshot_tree())
+                       if hasattr(a, "snapshot_tree") else np.asarray(a)),
+            tree, is_leaf=lambda a: hasattr(a, "snapshot_tree"))
         if self.store is not None:
             # Fail fast on the caller: an image larger than one slot would
             # overwrite the other slot's published bytes (or be silently

@@ -50,14 +50,19 @@ class PageLease:
     page dirty exactly once, on the first release.
     """
 
-    __slots__ = ("region", "page_no", "write", "view", "_entry", "_released")
+    __slots__ = ("region", "page_no", "write", "view", "exclusive",
+                 "_entry", "_released")
 
     def __init__(self, region: "UMapRegion", page_no: int, write: bool,
-                 view: np.ndarray, entry: Optional["PageEntry"]):
+                 view: np.ndarray, entry: Optional["PageEntry"],
+                 exclusive: bool = False):
         self.region = region
         self.page_no = page_no
         self.write = write
         self.view = view
+        # Snapshot read lease (exclude_writers=True at grant): holds the
+        # page's `excl_reads` exclusion count until release (§18.4).
+        self.exclusive = exclusive
         self._entry = entry          # None => copy-backed
         self._released = False
 
@@ -70,7 +75,8 @@ class PageLease:
             return
         self._released = True
         if self._entry is not None:
-            self.region.service.release_lease(self._entry, self.write)
+            self.region.service.release_lease(self._entry, self.write,
+                                              excl=self.exclusive)
         elif self.write:
             # Copy-backed write lease: publish the snapshot through the
             # normal dirty-tracking write path.
@@ -88,7 +94,11 @@ class PageLease:
             return
         self._released = True
         if self._entry is not None:
-            self.region.service.release_lease(self._entry, write=False)
+            # Pass the TRUE grant flags so the exclusion counters unwind;
+            # dirty=False suppresses only the write-back side effect.
+            self.region.service.release_lease(self._entry, self.write,
+                                              excl=self.exclusive,
+                                              dirty=False)
 
     def __enter__(self) -> "PageLease":
         return self

@@ -116,8 +116,8 @@ _SHARD_COUNTERS = (
     "prefetch_hits", "evictions", "writebacks", "coalesced_fills",
     "coalesced_pages", "lock_contended", "fill_stalls",
     "coalesced_writebacks", "writeback_pages", "leases",
-    "lease_blocked_evictions", "io_errors", "writeback_errors",
-    "quarantined_pages", "quarantine_retries",
+    "lease_blocked_evictions", "lease_excl_waits", "io_errors",
+    "writeback_errors", "quarantined_pages", "quarantine_retries",
 )
 
 # Service-level counters: each has a single writer thread (watermark
@@ -154,6 +154,7 @@ class ServiceStats:
     writeback_pages: int = 0        # pages written via batched write-backs
     leases: int = 0                 # zero-copy leases granted (DESIGN.md §13)
     lease_blocked_evictions: int = 0  # victim/clean skips due to live leases
+    lease_excl_waits: int = 0       # grant waits for writer/snapshot exclusion (§18.4)
     io_errors: int = 0              # fills that died on a store exception (§14.4)
     writeback_errors: int = 0       # failed write-back attempts (§14.4)
     quarantined_pages: int = 0      # currently quarantined (§17.4 re-post decrements)
@@ -661,7 +662,9 @@ class PagingService:
 
     def acquire_one(self, region: "UMapRegion", page_no: int,
                     lease: bool = False,
-                    deadline: Optional[float] = None) -> Optional[PageEntry]:
+                    deadline: Optional[float] = None,
+                    write_lease: bool = False,
+                    exclude_writers: bool = False) -> Optional[PageEntry]:
         """Pin one page, faulting it in if needed (userfaultfd-style block).
 
         The caller must not hold any other pins (deadlock-freedom invariant;
@@ -669,12 +672,19 @@ class PagingService:
         a ``time.monotonic()`` bound past which this returns ``None`` so
         the run can abort-and-retry instead of deadlocking).  With
         ``lease=True`` the pin is accounted as a zero-copy lease
-        (``entry.leases`` + the ``leases`` counter, DESIGN.md §13).  Raises
-        ``RuntimeError`` once the region has started closing — the guard
-        that closes the flush/unregister re-install race — and ``IOError``
-        when the fill died on a backing-store exception (the error-
-        propagation contract, DESIGN.md §14.4: every waiter raises, none
-        re-faults forever).
+        (``entry.leases`` + the ``leases`` counter, DESIGN.md §13);
+        ``write_lease`` additionally bumps ``entry.write_leases`` and
+        ``exclude_writers`` bumps ``entry.excl_reads`` — the two sides of
+        the snapshot/writer exclusion protocol (§18.4): a snapshot reader
+        (``exclude_writers=True``) waits while write leases are live, and
+        a write lease waits while snapshot readers are live.  Both waits
+        ride ``shard.cond`` (notified on every lease release) and honor
+        ``deadline``, so excluded ``lease_run`` grants abort-and-retry
+        rather than deadlock.  Raises ``RuntimeError`` once the region has
+        started closing — the guard that closes the flush/unregister
+        re-install race — and ``IOError`` when the fill died on a
+        backing-store exception (the error-propagation contract, DESIGN.md
+        §14.4: every waiter raises, none re-faults forever).
         """
         key = (region.region_id, page_no)
         shard = self._shard_of(key)
@@ -695,9 +705,25 @@ class PagingService:
                     dispatch = e
                     waitee = e
                 elif e.state is PageState.PRESENT:
+                    if lease and ((exclude_writers and e.write_leases > 0)
+                                  or (write_lease and e.excl_reads > 0)):
+                        # Excluded: wait for the opposing lease class to
+                        # drain.  shard.cond wraps the shard lock, so the
+                        # wait releases it; release_lease notify_all()s.
+                        shard.counters["lease_excl_waits"] += 1
+                        if deadline is not None \
+                                and time.monotonic() >= deadline:
+                            return None
+                        shard.cond.wait(timeout=0.05)
+                        first_attempt = False
+                        continue
                     e.pins += 1
                     if lease:
                         e.leases += 1
+                        if write_lease:
+                            e.write_leases += 1
+                        if exclude_writers:
+                            e.excl_reads += 1
                         shard.counters["leases"] += 1
                     shard.policy.on_touch(key)
                     if first_attempt:
@@ -810,13 +836,18 @@ class PagingService:
 
     def lease_page(self, region: "UMapRegion", page_no: int,
                    write: bool = False,
+                   exclude_writers: bool = False,
                    _deadline: Optional[float] = None) -> Optional[PageLease]:
         """Lease one page: a pinned view directly into the page buffer.
 
         The pin rides ``entry.pins`` (plus the ``entry.leases`` lease count),
         so the page cannot be evicted or written back while the view is
         live; a write-lease marks the page dirty exactly once, on release.
-        With ``config.zero_copy_leases=False`` the lease is copy-backed
+        ``exclude_writers=True`` grants a *snapshot* read lease: the grant
+        blocks while any write lease on the page is live, and write leases
+        block while the snapshot is held (§18.4) — the consistency contract
+        the async checkpointer relies on.  With
+        ``config.zero_copy_leases=False`` the lease is copy-backed
         (private snapshot; see core/lease.py).  ``_deadline`` is
         ``lease_run``'s abort bound — past it the grant returns ``None``.
         """
@@ -830,21 +861,24 @@ class PagingService:
                 data.flags.writeable = False
             return PageLease(region, page_no, write, data, entry=None)
         entry = self.acquire_one(region, page_no, lease=True,
-                                 deadline=_deadline)
+                                 deadline=_deadline, write_lease=write,
+                                 exclude_writers=exclude_writers and not write)
         if entry is None:
             return None
         view = self.buffer.slot_view(entry.slot, nbytes)
         if not write:
             view = view[:]                   # fresh view object, shared memory
             view.flags.writeable = False
-        return PageLease(region, page_no, write, view, entry)
+        return PageLease(region, page_no, write, view, entry,
+                         exclusive=exclude_writers and not write)
 
     # Per-attempt grant bound for lease_run: long enough that any live
     # fill completes, short enough that an aborted attempt retries fast.
     _LEASE_RUN_ATTEMPT_S = 0.25
 
     def lease_run(self, region: "UMapRegion", first_page: int, npages: int,
-                  write: bool = False) -> LeaseRun:
+                  write: bool = False,
+                  exclude_writers: bool = False) -> LeaseRun:
         """Lease ``npages`` adjacent pages, posting all fills up front.
 
         Holds ``npages`` pins on the calling thread — the documented
@@ -874,6 +908,7 @@ class PagingService:
             try:
                 for pno in pages:
                     ls = self.lease_page(region, pno, write=write,
+                                         exclude_writers=exclude_writers,
                                          _deadline=deadline)
                     if ls is None:
                         break
@@ -894,19 +929,32 @@ class PagingService:
             time.sleep(0.001 * (1 + (threading.get_ident() >> 4) % 7)
                        * min(attempt, 8))
 
-    def release_lease(self, entry: PageEntry, write: bool) -> None:
+    def release_lease(self, entry: PageEntry, write: bool,
+                      excl: bool = False,
+                      dirty: Optional[bool] = None) -> None:
         """Drop a lease pin; a write-lease marks the page dirty here —
-        exactly once, because PageLease.release is idempotent."""
+        exactly once, because PageLease.release is idempotent.  ``write``
+        and ``excl`` must mirror the grant flags (they unwind the
+        exclusion counters); ``dirty`` defaults to ``write`` and is forced
+        False by ``PageLease.abandon`` — an aborted write grant must
+        unwind ``write_leases`` without the spurious dirty mark."""
+        if dirty is None:
+            dirty = write
         shard = self._shard_of(entry.key)
         with self._locked(shard):
             entry.leases -= 1
             entry.pins -= 1
-            assert entry.pins >= 0 and entry.leases >= 0, \
-                f"lease underflow on {entry.key}"
             if write:
+                entry.write_leases -= 1
+            if excl:
+                entry.excl_reads -= 1
+            assert (entry.pins >= 0 and entry.leases >= 0
+                    and entry.write_leases >= 0 and entry.excl_reads >= 0), \
+                f"lease underflow on {entry.key}"
+            if dirty:
                 shard.table.mark_dirty(entry)
             shard.cond.notify_all()
-        if write:
+        if dirty:
             self.watermark.poke()
 
     # ------------------------------------------- adaptive engine (DESIGN.md §8)

@@ -37,7 +37,7 @@ class PageEntry:
     __slots__ = (
         "key", "state", "slot", "dirty", "pins", "leases", "event",
         "prefetched", "touched_after_prefetch", "error", "wb_retries",
-        "quarantined",
+        "quarantined", "write_leases", "excl_reads",
     )
 
     def __init__(self, key: PageKey, state: PageState, slot: int = -1):
@@ -61,6 +61,15 @@ class PageEntry:
         # `lease_blocked_evictions` telemetry: capacity/clean pressure that
         # cannot make progress because the application holds views.
         self.leases = 0
+        # Writer-exclusion accounting (DESIGN.md §18.4): `write_leases`
+        # counts the subset of `leases` granted with write=True, and
+        # `excl_reads` the read leases granted with exclude_writers=True
+        # (consistent-snapshot readers, e.g. the async checkpointer).  A
+        # snapshot read lease blocks while write_leases > 0 and vice versa,
+        # so a snapshot never aliases bytes mid-mutation.  Plain leases
+        # ignore both counters — the historical no-exclusion behavior.
+        self.write_leases = 0
+        self.excl_reads = 0
         # Signaled when the page becomes PRESENT (UFFDIO_COPY semantics: wake
         # waiters only after the full page is installed) or when CLEANING /
         # EVICTING completes.

@@ -161,7 +161,8 @@ class UMapRegion:
 
     # ------------------------------------------------- zero-copy leases (§13)
 
-    def lease(self, page_no: int, write: bool = False) -> PageLease:
+    def lease(self, page_no: int, write: bool = False,
+              exclude_writers: bool = False) -> PageLease:
         """Lease page ``page_no``: a pinned view straight into the page
         buffer — no memcpy (DESIGN.md §13).
 
@@ -169,7 +170,11 @@ class UMapRegion:
                 ls.view[:8] = payload          # in-place mutation
 
         The page is ineligible for eviction/write-back while the lease is
-        live; a write-lease marks it dirty exactly once, on release.  For
+        live; a write-lease marks it dirty exactly once, on release.
+        ``exclude_writers=True`` (read leases only) grants a *snapshot*
+        lease that blocks until live write leases on the page release, and
+        excludes new write leases until it is released (§18.4) — used by
+        consistent-snapshot readers such as the async checkpointer.  For
         small sub-page transfers ``read``/``write`` (the locked-copy fast
         path) remain cheaper than lease bookkeeping — leases pay off for
         whole-page and multi-page access.
@@ -177,10 +182,12 @@ class UMapRegion:
         if not 0 <= page_no < self.num_pages:
             raise IndexError(
                 f"page {page_no} outside region of {self.num_pages} pages")
-        return self.service.lease_page(self, page_no, write=write)
+        return self.service.lease_page(self, page_no, write=write,
+                                       exclude_writers=exclude_writers)
 
     def lease_run(self, first_page: int, npages: int,
-                  write: bool = False) -> LeaseRun:
+                  write: bool = False,
+                  exclude_writers: bool = False) -> LeaseRun:
         """Lease ``npages`` adjacent pages as one unit (fills posted up
         front for I/O overlap).  Length-capped — see
         :meth:`PagingService.lease_run`."""
@@ -188,7 +195,8 @@ class UMapRegion:
             raise IndexError(
                 f"run [{first_page}, {first_page + npages}) outside region "
                 f"of {self.num_pages} pages")
-        return self.service.lease_run(self, first_page, npages, write=write)
+        return self.service.lease_run(self, first_page, npages, write=write,
+                                      exclude_writers=exclude_writers)
 
     # ------------------------------------------------------------- hints
 

@@ -68,3 +68,28 @@ def reshard_tree(cfg: ModelConfig, mesh: Mesh, host_tree: PyTree) -> PyTree:
     return jax.tree.map(place, axes, host_tree,
                         is_leaf=lambda v: isinstance(v, tuple) and all(
                             a is None or isinstance(a, str) for a in v))
+
+
+def restore_train_state_elastic(cfg: ModelConfig, mesh: Mesh, store,
+                                manifest: dict, like_state: PyTree
+                                ) -> tuple:
+    """Restore a store-mode training checkpoint onto a DIFFERENT mesh.
+
+    The image is a ``{"params", "opt": {"m", "v"}, "step"}`` tree written
+    by ``ckpt.save_tree_to_store`` (one batched read restores it); params
+    and both AdamW moment trees — structurally identical to params, the
+    ZeRO-1 layout — are re-placed with the parameters' own logical-axis
+    rules.  Returns ``(state, RemeshReport)``; the report is the operator
+    answer to "can this checkpoint run on this mesh?" (DESIGN.md §18.5).
+    """
+    from ..ckpt.checkpoint import restore_tree_from_store
+
+    report = plan_remesh(cfg, mesh)
+    host = restore_tree_from_store(store, manifest, like_state)
+    out = dict(host)
+    out["params"] = reshard_tree(cfg, mesh, host["params"])
+    if isinstance(host.get("opt"), dict):
+        out["opt"] = {k: (reshard_tree(cfg, mesh, t) if k in ("m", "v")
+                          else t)
+                      for k, t in host["opt"].items()}
+    return out, report

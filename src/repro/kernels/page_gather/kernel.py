@@ -51,6 +51,9 @@ def page_scatter(pool: jax.Array, page_ids: jax.Array, pages: jax.Array, *,
     """Write staging ``pages`` [n, page_elems] into ``pool`` slots ``page_ids``.
 
     Returns the updated pool (the input buffer is donated/aliased).
+    Because of the donation, the write lands *in place*: callers must not
+    have asynchronously-pending reads of the old pool value when they
+    dispatch a scatter — block such gathers to completion first.
     """
     p, elems = pool.shape
     n = page_ids.shape[0]

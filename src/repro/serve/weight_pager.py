@@ -162,6 +162,24 @@ class RegionLayerSource:
             self._free.extend(self._layer_slots.pop(victim))
         return [self._free.pop() for _ in range(n)]
 
+    def invalidate(self, layers: Optional[Sequence[int]] = None) -> None:
+        """Drop cached device pages for ``layers`` (default: all).
+
+        The device pool caches layer bytes as fetched from the region;
+        a writer that mutates the region afterwards (the OOC trainer's
+        parameter sweep, DESIGN.md §18.2) must invalidate so the next
+        ``__getitem__`` re-fetches fresh bytes.  In-flight fetches are
+        not interrupted — callers sequence invalidation after their own
+        fetch/update barrier, as the trainer's step loop does.
+        """
+        with self._lock:
+            victims = (list(self._layer_slots)
+                       if layers is None else
+                       [i for i in layers if i in self._layer_slots])
+            for i in victims:
+                self._free.extend(self._layer_slots.pop(i))
+                self._fifo.remove(i)
+
     def _fetch_pages(self, spec: dict) -> List[jax.Array]:
         """Layer pages as device arrays — zero host staging via leases."""
         if self.region.service.config.zero_copy_leases:
@@ -190,11 +208,15 @@ class RegionLayerSource:
             with self._lock:
                 slots = self._layer_slots.get(i)
                 if slots is not None:
-                    # Gather under the lock: `flat` references the current
-                    # immutable pool value, so later scatters/evictions
-                    # cannot tear it.
+                    # Gather under the lock AND run it to completion there:
+                    # page_scatter donates the pool buffer (in-place
+                    # install), so a gather still *executing* when the next
+                    # scatter dispatches would read half-overwritten pages —
+                    # dispatch order under the lock does not order execution
+                    # against a donated write.
                     flat = page_gather(self._pool,
                                        jnp.asarray(slots, jnp.int32))
+                    flat.block_until_ready()
                     break
                 ev = self._inflight.get(i)
                 if ev is None:                # this thread fetches

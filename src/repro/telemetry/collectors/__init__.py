@@ -13,6 +13,7 @@ from .process import ProcessCollector
 from .resilience import ResilienceCollector
 from .serve import ServeCollector
 from .tiering import TieringCollector
+from .train import TrainCollector
 
 __all__ = [
     "Collector",
@@ -22,4 +23,5 @@ __all__ = [
     "ResilienceCollector",
     "ServeCollector",
     "TieringCollector",
+    "TrainCollector",
 ]

@@ -64,6 +64,45 @@ def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Arr
     return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
 
 
+def update_scalars(cfg: AdamWConfig, step: jax.Array, gnorm: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-step scalar bundle ``(clip_scale, lr, bc1, bc2)``.
+
+    Computed ONCE per step from the pre-increment ``step`` and the global
+    gradient norm, then broadcast into every per-leaf/per-page call of
+    :func:`adamw_elementwise` — the decomposition that lets the OOC sweep
+    (train/ooc.py) update state in page-sized chunks while staying
+    bitwise-identical to whole-leaf application: everything non-elementwise
+    about AdamW lives here.  Mirrors :func:`apply_update` exactly
+    (``lr`` from the pre-increment step, bias corrections from the
+    post-increment step).
+    """
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm
+                        / jnp.maximum(gnorm, 1e-9)).astype(jnp.float32)
+    lr = lr_schedule(cfg, step).astype(jnp.float32)
+    stepf = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.beta1 ** stepf
+    bc2 = 1 - cfg.beta2 ** stepf
+    return scale, lr, bc1, bc2
+
+
+def adamw_elementwise(cfg: AdamWConfig, p, g, m, v, scale, lr, bc1, bc2):
+    """The purely elementwise core of one AdamW update (fp32 in, fp32 out).
+
+    Every op is an elementwise IEEE add/mul/div/sqrt, so the result for
+    each element is independent of how the arrays are chunked — the
+    property the paged-vs-resident differential suite leans on: applying
+    this to page-sized slices produces bitwise-identical results to
+    whole-leaf application.  Shared by the OOC trainer's page sweep and
+    its resident reference.
+    """
+    g = g * scale
+    m = cfg.beta1 * m + (1 - cfg.beta1) * g
+    v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+    delta = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p
+    return p - lr * delta, m, v
+
+
 def apply_update(cfg: AdamWConfig, params: PyTree, grads: PyTree,
                  state: AdamWState) -> Tuple[PyTree, AdamWState, dict]:
     grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)

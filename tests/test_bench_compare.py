@@ -220,10 +220,10 @@ class TestCommittedGoldenFiles:
     def _suites(self):
         return sorted(p for p in RESULTS_DIR.glob("*.json"))
 
-    def test_seven_baselines_committed(self):
+    def test_eight_baselines_committed(self):
         assert {p.stem for p in self._suites()} == {
             "chaos", "fault_overhead", "fault_storm", "serve", "sort",
-            "tiering", "writeback"}
+            "tiering", "train_ooc", "writeback"}
 
     def test_all_baselines_are_v2_and_loadable(self):
         for path in self._suites():
