@@ -20,6 +20,26 @@ pattern, so the storm doubles as the mid-migration byte-exactness
 acceptance check: a torn extent (promotion racing a fault) would fail the
 compare, not just slow down.
 
+A second storm exercises the N-tier chain (§14.5): a three-level
+``TierChain`` (host / 5 ms remote / 25 ms remote) under a three-band skew
+(75% hot / 20% warm / 5% cold) whose bands rotate mid-storm, with a small
+write slice confined to two hot extents.  Three configurations run the
+identical workload:
+
+  3tier-heat         legacy heat-threshold policy: only the host level is
+                     populated, so the warm band pays the 25 ms base tier.
+  3tier-utility      utility-driven migration: the warm band settles on
+                     the 5 ms mid tier, the hot band on host memory.
+  3tier-copy-always  utility policy, but every demotion copies (the
+                     non-exclusive shadow flip disabled) — the write-
+                     traffic A/B baseline.
+
+Two gated ratios come out of the pairing: ``speedup_utility_vs_heat_3tier``
+(fill-throughput, acceptance >= 1.3x) and ``migration_write_savings_frac``
+(1 - utility/copy-always demotion write-back bytes, acceptance >= 0.4 —
+write-backs land only at the base level, so the per-level counter isolates
+them from promotion traffic).
+
 Run standalone (``python -m benchmarks.bench_tiering [--smoke|--full]``)
 or via ``python -m benchmarks.run --only tiering``.  Rows land in
 ``experiments/bench/tiering.json``.
@@ -113,6 +133,100 @@ def _storm_once(tiered: bool, threads: int, npages: int, page_size: int,
     return dt, fills, stats
 
 
+def _storm3_once(policy: str, copy_on_demote: bool, threads: int,
+                 npages: int, page_size: int, ops_per_thread: int):
+    """One 3-tier chain storm: host / 5 ms / 25 ms, three-band skew with a
+    mid-storm band rotation (forces demotion churn) and a write slice
+    confined to the first two hot extents (so most demotes are clean and
+    the shadow-flip savings are measurable)."""
+    from repro.core import (HostArrayStore, RemoteStore, TierChain,
+                            UMapConfig, umap, uunmap)
+
+    total = npages * page_size
+    extent_pages = 8
+    extent_size = extent_pages * page_size
+    idx = np.arange(total, dtype=np.uint64)
+    base = RemoteStore(HostArrayStore((idx % 249).astype(np.uint8)),
+                       latency_s=25e-3, bandwidth_Bps=2e9)
+    # Bands and budgets are extent-aligned; the fast tier holds exactly
+    # the hot band, the mid tier exactly the warm band.
+    hot_pages = (npages * 8 // 100 // extent_pages) * extent_pages    # ~8%
+    warm_pages = (npages * 23 // 100 // extent_pages) * extent_pages  # ~23%
+    fast_bytes = hot_pages * page_size
+    mid_bytes = warm_pages * page_size
+    mid = RemoteStore(HostArrayStore(np.zeros(mid_bytes, np.uint8)),
+                      latency_s=5e-3, bandwidth_Bps=2e9)
+    store = TierChain(
+        [HostArrayStore(np.zeros(fast_bytes, np.uint8)), mid, base],
+        extent_size=extent_size, budgets=[fast_bytes, mid_bytes],
+        promote_on_read=False, copy_on_demote=copy_on_demote)
+    cfg = UMapConfig(page_size=page_size,
+                     buffer_size=(npages // 25) * page_size,
+                     num_fillers=4, num_evictors=1, shards=4,
+                     tier_policy=policy, tier_max_migrations=32)
+    region = umap(store, config=cfg)
+
+    # Band rotation at mid-storm, extent-aligned
+    shift = (npages // 2 // extent_pages) * extent_pages
+    write_pages = extent_pages          # write slice: first hot extent
+    barrier = threading.Barrier(threads + 1)
+    errors: List[str] = []
+
+    def poster(tid: int) -> None:
+        rng = np.random.default_rng(2000 + tid)
+        barrier.wait()
+        for i in range(ops_per_thread):
+            base_pg = shift if i >= ops_per_thread // 2 else 0
+            r = rng.random()
+            if r < 0.75:
+                p = base_pg + int(rng.integers(0, hot_pages))
+            elif r < 0.98:
+                p = base_pg + int(rng.integers(hot_pages,
+                                               hot_pages + warm_pages))
+            else:
+                p = int(rng.integers(0, npages))
+            p %= npages
+            if r < 0.75 and 0 <= p - base_pg < write_pages \
+                    and rng.random() < 0.05:
+                # Idempotent write (same generator bytes): marks the extent
+                # dirty without perturbing the byte-verification oracle.
+                region.write(p * page_size, _expected(p, page_size))
+                continue
+            got = region.read(p * page_size, page_size)
+            if not np.array_equal(got, _expected(p, page_size)):
+                errors.append(f"byte mismatch on page {p} (op {i})")
+                return
+
+    ts = [threading.Thread(target=poster, args=(t,)) for t in range(threads)]
+    [t.start() for t in ts]
+    barrier.wait()
+    t0 = time.perf_counter()
+    [t.join() for t in ts]
+    dt = time.perf_counter() - t0
+    if errors:
+        raise AssertionError("; ".join(errors[:3]))
+    st = region.stats()
+    fills = st["demand_faults"]
+    tstats = store.tier_stats()
+    stats = {
+        "demand_faults": fills,
+        "tier_promotions": st["tier_promotions"],
+        "tier_demotions": st["tier_demotions"],
+        "io_errors": st["io_errors"],
+        "mid_store_reads": mid.num_reads,
+        "base_store_reads": base.num_reads,
+        "promotions": tstats["promotions"],
+        "demotions": tstats["demotions"],
+        "shadow_demotions": tstats["shadow_demotions"],
+        "migration_aborts": tstats["migration_aborts"],
+        # Demotion write-backs land only at the base level; promotions
+        # charge the cache level they fill (§14.2).
+        "writeback_bytes": tstats["migration_write_bytes_by_level"][-1],
+    }
+    uunmap(region)
+    return dt, fills, stats
+
+
 def run(quick: bool = True) -> List:
     from .common import Row
 
@@ -159,9 +273,48 @@ def run(quick: bool = True) -> List:
         / (runs["slow-only"][i][1] / runs["slow-only"][i][0])
         for i in range(reps)
     ]
+
+    # ----------------------------------------- 3-tier chain storm (§14.5)
+    if quick:
+        npages3, ops3, reps3 = 600, 600, 3
+    else:
+        npages3, ops3, reps3 = 1000, 800, 3
+    configs3 = (("3tier-heat", "heat", False),
+                ("3tier-utility", "utility", False),
+                ("3tier-copy-always", "utility", True))
+    runs3: Dict[str, list] = {label: [] for label, _, _ in configs3}
+    for _ in range(reps3):
+        for label, policy, cod in configs3:
+            runs3[label].append(
+                _storm3_once(policy=policy, copy_on_demote=cod,
+                             threads=threads, npages=npages3,
+                             page_size=page_size, ops_per_thread=ops3))
+    for label, _, _ in configs3:
+        dt, fills, stats = med(runs3[label], key=lambda r: r[1] / r[0])
+        rows.append(Row("tiering", label, page_size, dt, {
+            "threads": threads,
+            "npages": npages3,
+            "hot_fraction": 0.08,
+            "fills_per_s": round(fills / dt, 1) if dt else float("nan"),
+            **stats,
+        }))
+    speedup3 = [
+        (runs3["3tier-utility"][i][1] / runs3["3tier-utility"][i][0])
+        / (runs3["3tier-heat"][i][1] / runs3["3tier-heat"][i][0])
+        for i in range(reps3)
+    ]
+    savings = [
+        1.0 - (runs3["3tier-utility"][i][2]["writeback_bytes"]
+               / max(1, runs3["3tier-copy-always"][i][2]["writeback_bytes"]))
+        for i in range(reps3)
+    ]
     rows.append(Row("tiering", "summary", page_size, 0.0, {
         "threads": threads,
         "speedup_tiered_vs_slow_only": round(sorted(per_rep)[reps // 2], 2),
+        "speedup_utility_vs_heat_3tier":
+            round(sorted(speedup3)[reps3 // 2], 2),
+        "migration_write_savings_frac":
+            round(sorted(savings)[reps3 // 2], 3),
     }))
     return rows
 

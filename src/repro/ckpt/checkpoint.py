@@ -250,11 +250,15 @@ class AsyncCheckpointer:
         *inside* the save window reads it from there (the documented
         two-slot overlap caveat) — the promise applies between saves.
         """
-        from ..core.store import TieredStore
-        if not isinstance(self.store, TieredStore):
+        from ..core.store import TierChain
+        if not isinstance(self.store, TierChain):
             return
-        for ext in self.store.resident_extents():
-            self.store.demote(ext)
+        exts = set()
+        for lvl in range(self.store.base_level):
+            exts.update(self.store.resident_extents(lvl))
+        for ext in exts:
+            while self.store.demote(ext):      # drop every cache-level copy
+                pass
 
     def _writer(self) -> None:
         while True:

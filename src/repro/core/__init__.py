@@ -63,6 +63,9 @@ from .store import (  # noqa: F401
     MultiFileStore,
     RemoteStore,
     SyntheticStore,
+    TierChain,
     TieredStore,
+    build_tier_stores,
+    parse_tier_chain,
 )
 from .watermark import WatermarkMonitor  # noqa: F401

@@ -21,12 +21,21 @@ Extensions beyond the paper's list (this repo's adaptive engine, DESIGN.md Â§8â€
   UMAP_ZERO_COPY_LEASES               zero-copy lease views into the page buffer (default on)
   UMAP_MAX_LEASE_RUN                  max pages a single lease_run may pin (default 64)
   UMAP_WRITEBACK_RETRIES              write-back attempts before a page is quarantined (default 3)
-  UMAP_TIER_FAST_BYTES                default fast-tier budget for TieredStore.from_config (default 0 = off)
+  UMAP_TIER_CHAIN                     cache-level spec for TierChain.from_config, fastest first,
+                                      e.g. "host:64M,file:/mnt/nvme/c.bin:1G" (default "" = off;
+                                      no latency figures â€” tier speed is sampled online)
+  UMAP_TIER_FAST_BYTES                DEPRECATED: legacy spelling of a depth-2 chain â€”
+                                      "UMAP_TIER_FAST_BYTES=64M" maps to "UMAP_TIER_CHAIN=host:64M"
   UMAP_TIER_EXTENT                    tier migration extent size in bytes (default 1M)
   UMAP_TIER_INTERVAL_MS               migration-engine cycle interval (default 50 ms)
-  UMAP_TIER_DECAY                     per-cycle heat decay factor (default 0.8)
+  UMAP_TIER_DECAY                     per-cycle heat/write-intensity decay factor (default 0.8)
   UMAP_TIER_PROMOTE_HEAT              heat threshold for promotion (default 2.0)
   UMAP_TIER_MAX_MIGRATIONS            max promote/demote pairs per cycle (default 8)
+  UMAP_TIER_POLICY                    migration policy: "utility" (sampled-latency utility model)
+                                      or "heat" (legacy threshold loop) (default utility)
+  UMAP_TIER_EWMA_ALPHA                smoothing factor for the online latency samplers (default 0.2)
+  UMAP_TIER_HYSTERESIS                victim-vs-candidate utility ratio below which an eviction
+                                      swap proceeds (default 0.5)
   UMAP_RESILIENT_IO                   wrap region stores in ResilientStore + pager-level
                                       fill/write-back retries (default off; DESIGN.md Â§17)
   UMAP_RETRY_LIMIT                    retry attempts per store op after the first try (default 3)
@@ -58,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Callable, Optional
 
 # ---------------------------------------------------------------------------
@@ -191,12 +201,25 @@ class UMapConfig:
     # sustaining >= ~8 demand faults/s (heat 2.0 at 50 ms cycles, 0.8
     # decay â€” half-life ~0.16 s) while extents faulting 10x slower stay an
     # order of magnitude below the threshold.
-    tier_fast_bytes: int = 0                 # UMAP_TIER_FAST_BYTES (from_config budget)
+    tier_fast_bytes: int = 0                 # UMAP_TIER_FAST_BYTES (deprecated depth-2 budget)
     tier_extent_size: int = 1 << 20          # UMAP_TIER_EXTENT
     tier_interval_s: float = 0.05            # UMAP_TIER_INTERVAL_MS / 1000
     tier_decay: float = 0.8                  # UMAP_TIER_DECAY (heat *= decay per cycle)
     tier_promote_heat: float = 2.0           # UMAP_TIER_PROMOTE_HEAT
     tier_max_migrations: int = 8             # UMAP_TIER_MAX_MIGRATIONS per cycle
+    # N-tier chain spec (UMAP_TIER_CHAIN): comma-separated cache levels,
+    # fastest first ("host:64M,file:/mnt/nvme/c.bin:1G"); the base tier is
+    # the store the chain is built over.  Deliberately latency-free: tier
+    # speed is sampled online (EWMA over observed I/O), never configured.
+    tier_chain: str = ""                     # UMAP_TIER_CHAIN
+    # Migration policy: "utility" ranks extents by
+    #   utility = expected_accesses x sampled_latency_delta
+    #             - write_intensity x demote_cost
+    # and packs each level's byte budget by descending utility; "heat" is
+    # the legacy level-0 threshold loop (kept as the A/B baseline).
+    tier_policy: str = "utility"             # UMAP_TIER_POLICY
+    tier_ewma_alpha: float = 0.2             # UMAP_TIER_EWMA_ALPHA (sampler smoothing)
+    tier_hysteresis: float = 0.5             # UMAP_TIER_HYSTERESIS (swap ratio)
 
     # --- resilient I/O (DESIGN.md Â§17) --------------------------------------
     # When True, umap() wraps the region's store in a ResilientStore
@@ -282,6 +305,15 @@ class UMapConfig:
         if self.tier_max_migrations < 1:
             raise ValueError(
                 f"tier_max_migrations must be >= 1, got {self.tier_max_migrations}")
+        if self.tier_policy not in ("utility", "heat"):
+            raise ValueError(
+                f"tier_policy must be 'utility' or 'heat', got {self.tier_policy!r}")
+        if not (0.0 < self.tier_ewma_alpha <= 1.0):
+            raise ValueError(
+                f"tier_ewma_alpha must be in (0, 1], got {self.tier_ewma_alpha}")
+        if self.tier_hysteresis < 0:
+            raise ValueError(
+                f"tier_hysteresis must be >= 0, got {self.tier_hysteresis}")
         if self.io_retries < 0:
             raise ValueError(f"io_retries must be >= 0, got {self.io_retries}")
         if self.retry_backoff_s < 0 or self.retry_max_backoff_s < 0:
@@ -372,8 +404,18 @@ class UMapConfig:
             kw["max_lease_run"] = int(env["UMAP_MAX_LEASE_RUN"])
         if "UMAP_WRITEBACK_RETRIES" in env:
             kw["writeback_retries"] = int(env["UMAP_WRITEBACK_RETRIES"])
+        if "UMAP_TIER_CHAIN" in env:
+            kw["tier_chain"] = env["UMAP_TIER_CHAIN"].strip()
         if "UMAP_TIER_FAST_BYTES" in env:
             kw["tier_fast_bytes"] = parse_size(env["UMAP_TIER_FAST_BYTES"])
+            if "UMAP_TIER_CHAIN" not in env and kw["tier_fast_bytes"] >= 1:
+                # Deprecated shim: the byte budget is exactly a depth-2
+                # chain with one host-memory cache level.
+                warnings.warn(
+                    "UMAP_TIER_FAST_BYTES is deprecated; set "
+                    f"UMAP_TIER_CHAIN=host:{kw['tier_fast_bytes']} instead",
+                    DeprecationWarning, stacklevel=2)
+                kw["tier_chain"] = f"host:{kw['tier_fast_bytes']}"
         if "UMAP_TIER_EXTENT" in env:
             kw["tier_extent_size"] = parse_size(env["UMAP_TIER_EXTENT"])
         if "UMAP_TIER_INTERVAL_MS" in env:
@@ -384,6 +426,12 @@ class UMapConfig:
             kw["tier_promote_heat"] = float(env["UMAP_TIER_PROMOTE_HEAT"])
         if "UMAP_TIER_MAX_MIGRATIONS" in env:
             kw["tier_max_migrations"] = int(env["UMAP_TIER_MAX_MIGRATIONS"])
+        if "UMAP_TIER_POLICY" in env:
+            kw["tier_policy"] = env["UMAP_TIER_POLICY"].strip().lower()
+        if "UMAP_TIER_EWMA_ALPHA" in env:
+            kw["tier_ewma_alpha"] = float(env["UMAP_TIER_EWMA_ALPHA"])
+        if "UMAP_TIER_HYSTERESIS" in env:
+            kw["tier_hysteresis"] = float(env["UMAP_TIER_HYSTERESIS"])
         _truthy = ("1", "true", "yes", "on")
         if "UMAP_RESILIENT_IO" in env:
             kw["resilient_io"] = env["UMAP_RESILIENT_IO"].strip().lower() in _truthy

@@ -90,6 +90,38 @@ class TierHint(enum.Enum):
     PIN_FAST = "pin_fast"
 
 
+def parse_tier_hint(value) -> "tuple[TierHint, int | None]":
+    """Parse a tier hint that may carry a target level (§14.3).
+
+    On an N-level :class:`~repro.core.store.TierChain`, HOT and PIN_FAST
+    generalize to *target-level* hints: ``"pin_fast:1"`` pins a range at
+    cache level 1 or faster, ``"hot:2"`` asks the engine to place it at
+    level 2 or faster.  The bare strings (and :class:`TierHint` members)
+    keep their depth-2 meaning — target level 0, the fastest tier.
+
+    Returns ``(hint, level)`` where ``level`` is ``None`` when the hint
+    named no level (the engine then targets level 0).  COLD takes no
+    level — a demotion drains toward the base tier regardless.
+    """
+    if isinstance(value, TierHint):
+        return value, None
+    text = str(value)
+    level = None
+    if ":" in text:
+        name, _, lvl_s = text.partition(":")
+        try:
+            level = int(lvl_s)
+        except ValueError:
+            raise ValueError(f"bad tier hint level in {value!r}") from None
+        if level < 0:
+            raise ValueError(f"tier hint level must be >= 0, got {value!r}")
+        text = name
+    hint = TierHint(text)   # raises ValueError on unknown hint strings
+    if hint is TierHint.COLD and level is not None:
+        raise ValueError("tier_hint='cold' takes no target level")
+    return hint, level
+
+
 def apply_advice(config: UMapConfig, advice: AccessAdvice) -> UMapConfig:
     """Bake an advice's settings into a config (the paper's static path)."""
     return config.replace(**ADVICE_SETTINGS[advice])

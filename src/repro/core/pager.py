@@ -88,7 +88,7 @@ import time
 import warnings
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, TYPE_CHECKING
+from typing import Dict, List, Optional, Tuple, TYPE_CHECKING
 
 from .buffer import EvictionPolicy, PageBuffer, make_policy
 from .config import UMapConfig
@@ -127,7 +127,7 @@ _SHARD_COUNTERS = (
 # single-writer dicts instead.
 _SERVICE_COUNTERS = (
     "watermark_flushes", "fill_queue_peak", "pattern_transitions",
-    "tier_promotions", "tier_demotions", "tier_errors",
+    "tier_promotions", "tier_demotions", "tier_errors", "tier_cycles",
 )
 
 
@@ -160,9 +160,10 @@ class ServiceStats:
     quarantined_pages: int = 0      # currently quarantined (§17.4 re-post decrements)
     quarantine_retries: int = 0     # quarantined pages re-posted for cleaning (§17)
     pattern_transitions: int = 0    # classifier-driven retunes applied
-    tier_promotions: int = 0        # extents migrated into the fast tier (§14)
-    tier_demotions: int = 0         # extents migrated out of the fast tier
+    tier_promotions: int = 0        # extents migrated toward a faster tier (§14)
+    tier_demotions: int = 0         # extent copies dropped from a cache tier
     tier_errors: int = 0            # migration cycles/ops that died on store I/O
+    tier_cycles: int = 0            # migration-engine passes completed (§14.5)
     shards: int = 1                 # metadata stripe count
     steals: int = 0                 # work-stealing events (idle filler stole)
     stolen_work: int = 0            # fill work items moved by stealing
@@ -204,7 +205,7 @@ class _Shard:
     """One metadata stripe: lock, condition, table, policy, slots, counters."""
 
     __slots__ = ("index", "lock", "cond", "table", "policy", "free", "counters",
-                 "heat")
+                 "heat", "wheat")
 
     def __init__(self, index: int, policy_name: str):
         self.index = index
@@ -217,9 +218,13 @@ class _Shard:
         # Access-heat accounting for tiered regions (DESIGN.md §14.1):
         # (region_id, extent_no) -> decayed demand-fault count, mutated
         # under this shard's lock, decayed + aggregated by the migration
-        # thread.  Empty (zero overhead) unless a TieredStore region is
+        # thread.  Empty (zero overhead) unless a TierChain region is
         # registered.
         self.heat: Dict[tuple, float] = {}
+        # Write-intensity twin (§14.5): decayed dirty-mark count per extent,
+        # same keying and lifecycle.  The utility model charges write-heavy
+        # extents their eventual demote write-back.
+        self.wheat: Dict[tuple, float] = {}
 
 
 class _FillWork:
@@ -299,6 +304,10 @@ class PagingService:
         self._tier_cv = threading.Condition()
         self._tier_thread: Optional[threading.Thread] = None
         self._tier_stop = False
+        # "hot:<level>" hint targets: (region_id, extent) -> chain level the
+        # app asked the extent to land at (§14.4).  Guarded by _tier_cv's
+        # lock; pruned when the seeded heat decays away.
+        self._hot_targets: Dict[tuple, int] = {}
 
         # Kernel-mmap fidelity: Linux serializes fault handling per address
         # space on mmap_sem — the scalability bottleneck the paper's related
@@ -438,12 +447,18 @@ class PagingService:
             return
         from ..telemetry.collectors import ResilienceCollector, TieringCollector
         store = region.store
-        resilient = [
-            (tag, s) for tag, s in
-            (("", store), ("/fast", getattr(store, "fast", None)),
-             ("/slow", getattr(store, "slow", None)))
-            if hasattr(s, "resilience_stats")
-        ]
+        levels = getattr(store, "levels", None)
+        if levels is not None:               # tier chain: tag every level
+            last = len(levels) - 1
+            tagged = [("", store)] + [
+                ("/fast" if lvl == 0 else
+                 "/slow" if lvl == last else f"/t{lvl}", s)
+                for lvl, s in enumerate(levels)]
+        else:
+            tagged = [("", store), ("/fast", getattr(store, "fast", None)),
+                      ("/slow", getattr(store, "slow", None))]
+        resilient = [(tag, s) for tag, s in tagged
+                     if hasattr(s, "resilience_stats")]
         if not getattr(region, "tiered", False) and not resilient:
             return
         with self.lock:
@@ -652,6 +667,26 @@ class PagingService:
                (pno * region.page_size) // region.store.extent_size)
         shard.heat[key] = shard.heat.get(key, 0.0) + 1.0
 
+    def _wheat_locked(self, shard: _Shard, region: "UMapRegion",
+                      pno: int) -> None:
+        """Bump the write intensity of the store extent behind ``pno``
+        (shard lock held).  Every dirty-mark is a future write-back the
+        utility model must charge against migrating the extent — a hot
+        *and* write-heavy extent that gets demoted pays a base-tier write
+        the placement should have anticipated (DESIGN.md §14.5)."""
+        key = (region.region_id,
+               (pno * region.page_size) // region.store.extent_size)
+        shard.wheat[key] = shard.wheat.get(key, 0.0) + 1.0
+
+    def _note_write_locked(self, shard: _Shard, entry: PageEntry) -> None:
+        """Write-intensity bump for call sites that only hold a PageEntry
+        (shard lock held); resolves the region from the entry key."""
+        rid, pno = entry.key
+        region = self._regions.get(rid)
+        if region is not None and region.tiered \
+                and self._tier_thread is not None:
+            self._wheat_locked(shard, region, pno)
+
     def _dispatch_fills(self, region: "UMapRegion",
                         entries: List[PageEntry]) -> None:
         if self.config.mmap_compat:
@@ -811,6 +846,8 @@ class PagingService:
             slot = self.buffer.slot_view(e.slot, self.buffer.slot_size)
             slot[page_off : page_off + src.nbytes] = src
             shard.table.mark_dirty(e)
+            if region.tiered and self._tier_thread is not None:
+                self._wheat_locked(shard, region, page_no)
             return True
 
     def _dispatch_fill(self, region: "UMapRegion", entry: PageEntry) -> None:
@@ -830,6 +867,7 @@ class PagingService:
         shard = self._shard_of(entry.key)
         with self._locked(shard):
             shard.table.mark_dirty(entry)
+            self._note_write_locked(shard, entry)
         self.watermark.poke()
 
     # ------------------------------------------- zero-copy leases (DESIGN.md §13)
@@ -953,6 +991,7 @@ class PagingService:
                 f"lease underflow on {entry.key}"
             if dirty:
                 shard.table.mark_dirty(entry)
+                self._note_write_locked(shard, entry)
             shard.cond.notify_all()
         if dirty:
             self.watermark.poke()
@@ -1020,15 +1059,18 @@ class PagingService:
     # ----------------------------- tier migration engine (DESIGN.md §14)
 
     def apply_tier_hint(self, region: "UMapRegion", hint,
-                        extents: List[int]) -> None:
+                        extents: List[int], level: int = 0) -> None:
         """Apply an application tier hint (``region.advise(tier_hint=...)``).
 
         Hints override heat, per the paper's application-knowledge-first
         design: ``hot`` seeds the extents with promote-threshold heat,
         ``pin_fast`` additionally pins them against demotion, ``cold``
-        zeroes their heat and queues demotion.  All migration I/O stays on
-        the migration thread (poked here for promptness) — hints never
-        charge the application thread a tier copy.
+        zeroes their heat and write intensity and queues demotion.
+        ``level`` steers ``hot``/``pin_fast`` at a specific chain level
+        (the ``"hot:1"`` / ``"pin_fast:2"`` forms, §14.4); the default is
+        the fastest tier.  All migration I/O stays on the migration thread
+        (poked here for promptness) — hints never charge the application
+        thread a tier copy.
         """
         from .hints import TierHint
         hint = TierHint(hint)
@@ -1039,10 +1081,21 @@ class PagingService:
                 with self._locked(shard):
                     for ext in extents:
                         shard.heat.pop((rid, ext), None)
+                        shard.wheat.pop((rid, ext), None)
+            with self._tier_cv:
+                for ext in extents:
+                    self._hot_targets.pop((rid, ext), None)
             store.mark_cold(extents)
         else:
             if hint is TierHint.PIN_FAST:
-                store.pin_fast(extents)
+                store.pin_fast(extents, level=level)
+            elif level > 0:
+                # "hot:<level>" — remember the requested landing level so
+                # the migration engine steers the copy mid-chain instead
+                # of racing it to the fastest tier.
+                with self._tier_cv:
+                    for ext in extents:
+                        self._hot_targets[(rid, ext)] = level
             # Seed heat in the extent's lead-page shard (aggregation sums
             # across shards, so one stripe carrying the boost suffices).
             boost = 2.0 * self.config.tier_promote_heat
@@ -1068,40 +1121,59 @@ class PagingService:
                 self._svc["tier_errors"] += 1    # next cycle retries
 
 
-    def _decay_heat(self) -> Dict[tuple, float]:
-        """Decay every shard's heat counters and return the aggregate.
+    def _decay_heat(self) -> Tuple[Dict[tuple, float], Dict[tuple, float]]:
+        """Decay every shard's heat + write-intensity counters and return
+        the two aggregates ``(heat, wheat)``.
 
         Exponential decay (``heat *= tier_decay`` per cycle) keeps the
         ranking recency-weighted — an extent hot during warmup but idle
         since cools below the promote threshold within a few cycles.
         Sub-0.05 residue is dropped so idle tiered services converge to
-        empty heat maps (zero steady-state cost).
+        empty maps (zero steady-state cost).
         """
         decay = self.config.tier_decay
         agg: Dict[tuple, float] = {}
+        wagg: Dict[tuple, float] = {}
         for shard in self.shards:
             with self._locked(shard):
-                dead = []
-                for k, v in shard.heat.items():
-                    v *= decay
-                    if v < 0.05:
-                        dead.append(k)
-                    else:
-                        shard.heat[k] = v
-                        agg[k] = agg.get(k, 0.0) + v
-                for k in dead:
-                    del shard.heat[k]
-        return agg
+                for counts, out in ((shard.heat, agg), (shard.wheat, wagg)):
+                    dead = []
+                    for k, v in counts.items():
+                        v *= decay
+                        if v < 0.05:
+                            dead.append(k)
+                        else:
+                            counts[k] = v
+                            out[k] = out.get(k, 0.0) + v
+                    for k in dead:
+                        del counts[k]
+        return agg, wagg
 
     def _tier_cycle(self) -> None:
-        """One migration pass: promote hot extents, demote cold ones.
+        """One migration pass, dispatched on ``config.tier_policy``.
 
-        Transactional safety lives in the store (copy → verify gen → flip,
+        ``utility`` (default) ranks placements by sampled-latency benefit
+        net of write-back cost (§14.5); ``heat`` is the legacy
+        fault-count engine, kept for A/B comparison.  Transactional
+        safety lives in the store either way (copy → verify gen → flip,
         §14.2): a promote/demote that races a write or an in-flight read
         returns False and is simply retried on a later cycle, so this loop
         never blocks a fault and never publishes a torn extent.
         """
-        heats = self._decay_heat()
+        if self.config.tier_policy == "heat":
+            self._tier_cycle_heat()
+        else:
+            self._tier_cycle_utility()
+        self._svc["tier_cycles"] += 1
+
+    def _tier_cycle_heat(self) -> None:
+        """Legacy engine: promote by decayed fault count, demote coldest.
+
+        Operates on the fastest level only (the historical two-tier
+        behavior); deeper chain levels are touched only by demand-miss
+        promotion inside the store.
+        """
+        heats, _ = self._decay_heat()
         with self.lock:
             regions = [r for r in self._regions.values()
                        if r.tiered and not r._closing]
@@ -1153,6 +1225,166 @@ class PagingService:
                     demoted += 1
                 if store.promote(ext):
                     promoted += 1
+        self._svc["tier_promotions"] += promoted
+        self._svc["tier_demotions"] += demoted
+
+    @staticmethod
+    def tier_utility(heat: float, wheat: float, lat_from: float,
+                     lat_to: float, wlat_base: float) -> float:
+        """THE placement score (DESIGN.md §14.5), shared by candidate gain
+        and resident hold value::
+
+            utility = expected_accesses × sampled_latency_delta
+                      − write_intensity × demote_cost
+
+        ``lat_from`` is the level the extent would otherwise serve from,
+        ``lat_to`` the level under consideration; the delta floors at 0
+        (a slower placement never scores positive access benefit), and
+        ``wlat_base`` prices the write-back a dirty extent eventually
+        pays when displaced."""
+        return heat * max(0.0, lat_from - lat_to) - wheat * wlat_base
+
+    def _tier_cycle_utility(self) -> None:
+        """Utility-driven engine over the whole chain (DESIGN.md §14.5).
+
+        Scores a placement of extent ``e`` at cache level ``t`` as
+
+            utility(e, t) = heat(e) × (rlat[fallback] − rlat[t])
+                            − wheat(e) × wlat[base]
+
+        where all latencies are the store's *online-sampled* per-op EWMAs
+        (§14.3) — no configured tier speeds anywhere.  ``fallback`` is the
+        level the extent would otherwise serve from: its current fastest
+        copy for promotion candidates, the base tier for extents already
+        resident at ``t`` (their hold value).  The write-intensity term
+        charges the eventual demote write-back that placing a write-heavy
+        extent in a cache tier commits to.  Per target level, fastest
+        first: pinned/hint-targeted extents move unconditionally, then
+        positive-utility candidates by descending score; a full level
+        evicts its lowest-hold resident only when that hold is under
+        ``tier_hysteresis ×`` the candidate's score (anti-ping-pong), and
+        a displaced victim spills one level down-chain when that still
+        carries utility — making the subsequent drop a free shadow flip
+        (§14.2).  An unsampled source tier reads as latency 0.0; such
+        extents promote optimistically (heat ≥ threshold) so a cold-start
+        chain can calibrate itself from the migration traffic.
+        """
+        heats, wheats = self._decay_heat()
+        with self.lock:
+            regions = [r for r in self._regions.values()
+                       if r.tiered and not r._closing]
+        threshold = self.config.tier_promote_heat
+        hyst = self.config.tier_hysteresis
+        budget = self.config.tier_max_migrations
+        promoted = demoted = 0
+        for region in regions:
+            store = region.store
+            rid = region.region_id
+            base = store.base_level
+            # --- explicit cold advice drains first (app knowledge wins)
+            cold_hints = store.take_cold_hints()
+            for ext in cold_hints:
+                while store.demote(ext):       # drop every cache copy
+                    demoted += 1
+            if cold_hints:
+                still = set()
+                for lvl in range(base):
+                    still.update(store.resident_extents(lvl))
+                missed = [e for e in cold_hints if e in still]
+                if missed:                     # pin/gen race: re-queue
+                    store.mark_cold(missed)
+            # --- observed tier speeds (never configured, §14.3)
+            rlat = [store.sampled_latency(lvl, "read")
+                    for lvl in range(base + 1)]
+            wlat_base = store.sampled_latency(base, "write")
+            heat_of = {e: v for (r, e), v in heats.items() if r == rid}
+            wheat_of = {e: v for (r, e), v in wheats.items() if r == rid}
+            pins = store.pin_levels()
+            with self._tier_cv:
+                stale = [k for k in self._hot_targets
+                         if k[0] == rid and k[1] not in heat_of]
+                for k in stale:                # hint died with its heat
+                    del self._hot_targets[k]
+                targets = {e: lvl for (r, e), lvl in
+                           self._hot_targets.items() if r == rid}
+            level_of: Dict[int, int] = {}      # fastest cached copy
+            for lvl in range(base - 1, -1, -1):
+                for e in store.resident_extents(lvl):
+                    level_of[e] = lvl
+            cand = (set(heat_of) | set(wheat_of) | set(pins)
+                    | set(targets) | set(level_of))
+
+            def gain(e: int, t: int) -> float:
+                return self.tier_utility(
+                    heat_of.get(e, 0.0), wheat_of.get(e, 0.0),
+                    rlat[level_of.get(e, base)], rlat[t], wlat_base)
+
+            def hold(e: int, t: int) -> float:
+                return self.tier_utility(
+                    heat_of.get(e, 0.0), wheat_of.get(e, 0.0),
+                    rlat[base], rlat[t], wlat_base)
+
+            for t in range(base):
+                if promoted >= budget:
+                    break
+                first = [e for e in cand
+                         if level_of.get(e, base) > t
+                         and (pins.get(e) == t or targets.get(e) == t)]
+                first.sort(key=lambda e: -heat_of.get(e, 0.0))
+                forced = set(first)
+                rest = []
+                for e in cand:
+                    if e in forced or level_of.get(e, base) <= t:
+                        continue
+                    if e in pins or e in targets:
+                        continue               # steered to another level
+                    g = gain(e, t)
+                    unsampled = rlat[level_of.get(e, base)] == 0.0
+                    if g > 0.0 or (unsampled
+                                   and heat_of.get(e, 0.0) >= threshold):
+                        rest.append((g, e))
+                rest.sort(key=lambda p: -p[0])
+                for ext in first + [e for _, e in rest]:
+                    if promoted >= budget:
+                        break
+                    if store.free_slots(t) == 0:
+                        g = gain(ext, t)
+                        score = max(g, hold(ext, t)) if ext in forced else g
+                        # hold() is monotone, so if the lowest-hold resident
+                        # fails the hysteresis bar nobody passes it.
+                        victim = None
+                        vics = [v for v in store.resident_extents(t)
+                                if v not in pins and v != ext]
+                        if vics:
+                            v0 = min(vics, key=lambda v: hold(v, t))
+                            if hold(v0, t) < hyst * score:
+                                victim = v0
+                        if victim is None:
+                            continue
+                        nxt = t + 1
+                        if (nxt < base and store.free_slots(nxt) > 0
+                                and hold(victim, nxt) > 0.0):
+                            store.promote(victim, nxt)   # spill down-chain
+                        if not store.demote(victim, t):
+                            continue
+                        demoted += 1
+                        level_of.pop(victim, None)
+                        for lvl in range(base):
+                            if victim in store.resident_extents(lvl):
+                                level_of[victim] = lvl
+                                break
+                    if store.promote(ext, t):
+                        promoted += 1
+                        level_of[ext] = min(level_of.get(ext, base), t)
+                        if targets.get(ext) == t:
+                            with self._tier_cv:
+                                self._hot_targets.pop((rid, ext), None)
+            # publish aggregate hold utility per level for telemetry
+            agg = [0.0] * (base + 1)
+            for lvl in range(base):
+                for e in store.resident_extents(lvl):
+                    agg[lvl] += max(0.0, hold(e, lvl))
+            store.note_utility(agg)
         self._svc["tier_promotions"] += promoted
         self._svc["tier_demotions"] += demoted
 

@@ -22,7 +22,7 @@ import numpy as np
 from .config import UMapConfig
 from .lease import LeaseRun, PageLease
 from .pager import PagingService
-from .store import BackingStore, TieredStore
+from .store import BackingStore, TierChain
 
 if TYPE_CHECKING:  # pragma: no cover
     from .hints import AccessAdvice, TierHint
@@ -41,10 +41,10 @@ class UMapRegion:
         cfg = service.config
         if cfg.resilient_io:
             # Resilience composition (DESIGN.md §17.5): tiered stores wrap
-            # per tier (one breaker each — a tripped fast tier must not gate
-            # the slow tier), everything else wraps whole.  Done before the
-            # tiered check below, which wrap_store preserves (TieredStore
-            # identity is kept; only its tiers are replaced in place).
+            # per level (one breaker each — a tripped tier must not gate
+            # the others), everything else wraps whole.  Done before the
+            # tiered check below, which wrap_store preserves (TierChain
+            # identity is kept; only its levels are replaced in place).
             from .resilient import wrap_store
             store = wrap_store(store, cfg)
         self.store = store
@@ -69,7 +69,7 @@ class UMapRegion:
         # Tiered-store regions feed the pager's heat counters and the
         # migration engine (DESIGN.md §14); must be set before register(),
         # which starts the migration thread on the first tiered region.
-        self.tiered = isinstance(store, TieredStore)
+        self.tiered = isinstance(store, TierChain)
         # Closing gate (DESIGN.md §12): set by unregister() *before* the
         # evicting flush.  New faults raise, queued fills are abandoned, so
         # no fill can re-install a page after the region is dropped.
@@ -215,8 +215,10 @@ class UMapRegion:
         tiered-store region only), overrides the migration engine's heat
         for the byte range ``[offset, offset + nbytes)`` (default: the
         whole region) — the paper's application-hints design extended to
-        tier placement (DESIGN.md §14.3).  The two hint kinds compose and
-        may be passed together.
+        tier placement (DESIGN.md §14.3).  On an N-level chain, HOT and
+        PIN_FAST accept a target cache level suffix (``"hot:1"``,
+        ``"pin_fast:2"``); the bare forms target level 0.  The two hint
+        kinds compose and may be passed together.
         """
         if advice is None and tier_hint is None:
             raise ValueError("advise() needs an access advice, a tier "
@@ -236,9 +238,15 @@ class UMapRegion:
     def advise_tier(self, hint: "TierHint | str", offset: int = 0,
                     nbytes: Optional[int] = None) -> None:
         """Tier-placement hint for a byte range (DESIGN.md §14.3)."""
+        from .hints import parse_tier_hint  # local: hints imports config
         if not self.tiered:
             raise ValueError(
-                "tier hints require a TieredStore-backed region")
+                "tier hints require a TierChain-backed region")
+        hint, level = parse_tier_hint(hint)
+        if level is not None and level >= self.store.base_level:
+            raise ValueError(
+                f"tier hint level {level} out of range: chain has cache "
+                f"levels 0..{self.store.base_level - 1}")
         nbytes = self.size - offset if nbytes is None else nbytes
         if nbytes <= 0 or offset < 0 or offset + nbytes > self.size:
             raise IndexError(
@@ -246,7 +254,8 @@ class UMapRegion:
                 f"region of {self.size} bytes")
         es = self.store.extent_size
         extents = list(range(offset // es, (offset + nbytes - 1) // es + 1))
-        self.service.apply_tier_hint(self, hint, extents)
+        self.service.apply_tier_hint(self, hint, extents,
+                                     level=0 if level is None else level)
 
     def prefetch(self, offset: int, nbytes: int) -> int:
         return self.prefetch_pages(self._page_range(offset, nbytes))

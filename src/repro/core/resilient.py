@@ -572,19 +572,24 @@ class ResilientStore(BackingStore):
 def wrap_store(store: BackingStore, config) -> BackingStore:
     """Compose resilience into ``store`` per DESIGN.md §17.5.
 
-    A :class:`~repro.core.store.TieredStore` is wrapped *per tier*, in place
-    (``store.fast`` / ``store.slow`` each get their own breaker), preserving
-    the TieredStore identity the pager keys tier logic on; any other store is
-    wrapped whole.  Idempotent: already-wrapped stores pass through.
+    A :class:`~repro.core.store.TierChain` is wrapped *per level*, in place
+    (every level — ``fast``/``slow`` on the depth-2 facade, each middle
+    tier of a deeper chain — gets its own breaker), preserving the chain
+    identity the pager keys tier logic on; any other store is wrapped
+    whole.  Level names: ``fast`` (level 0), ``slow`` (the base tier),
+    ``tier<l>`` (middles).  Idempotent: already-wrapped levels pass
+    through.
     """
-    from .store import TieredStore
-    if isinstance(store, TieredStore):
-        if not isinstance(store.fast, ResilientStore):
-            store.fast = ResilientStore.from_config(store.fast, config,
-                                                    name="fast")
-        if not isinstance(store.slow, ResilientStore):
-            store.slow = ResilientStore.from_config(store.slow, config,
-                                                    name="slow")
+    from .store import TierChain
+    if isinstance(store, TierChain):
+        base = store.base_level
+        for lvl, s in enumerate(store.levels):
+            if isinstance(s, ResilientStore):
+                continue
+            name = ("fast" if lvl == 0
+                    else "slow" if lvl == base else f"tier{lvl}")
+            store.set_level(lvl, ResilientStore.from_config(s, config,
+                                                            name=name))
         return store
     if isinstance(store, ResilientStore):
         return store
@@ -593,9 +598,13 @@ def wrap_store(store: BackingStore, config) -> BackingStore:
 
 def iter_breakers(store: BackingStore):
     """Yield every CircuitBreaker reachable from ``store`` (tiered stores
-    expose one per tier).  Duck-typed so callers need no isinstance walls."""
+    expose one per level).  Duck-typed so callers need no isinstance walls."""
     seen = set()
-    for s in (store, getattr(store, "fast", None), getattr(store, "slow", None)):
+    levels = getattr(store, "levels", None)
+    members = ((store, *levels) if levels is not None else
+               (store, getattr(store, "fast", None),
+                getattr(store, "slow", None)))
+    for s in members:
         br = getattr(s, "breaker", None)
         if isinstance(br, CircuitBreaker) and id(br) not in seen:
             seen.add(id(br))

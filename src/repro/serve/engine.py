@@ -51,12 +51,15 @@ class Tenant:
     """One tenant sharing the pool.  ``weight`` sets the fair-share page
     budget; ``priority`` orders admission and inverts victim selection
     (higher priority = admitted first, evicted last); ``pin_fast`` pins the
-    tenant's registered prefixes into the fast tier of the prefix region."""
+    tenant's registered prefixes into the prefix region's tier chain, at
+    level ``pin_level`` (0 = fastest; mid-priority tenants can claim a
+    middle level of a deeper chain without competing for the fastest)."""
 
     name: str
     weight: float = 1.0
     priority: int = 0
     pin_fast: bool = False
+    pin_level: int = 0
 
 
 @dataclasses.dataclass
@@ -338,7 +341,12 @@ class ServeEngine:
         self.prefix_region.write(off, data)
         self._region_cursor = off + len(data)
         if getattr(self.prefix_region, "tiered", False):
-            hint = "pin_fast" if entry.pinned else "hot"
+            if entry.pinned:
+                t = self.tenants.get(entry.tenant)
+                lvl = getattr(t, "pin_level", 0) if t is not None else 0
+                hint = f"pin_fast:{lvl}" if lvl > 0 else "pin_fast"
+            else:
+                hint = "hot"
             self.prefix_region.advise(tier_hint=hint, offset=off,
                                       nbytes=len(data))
 

@@ -63,6 +63,8 @@ _COUNTERS = (
      "Extents migrated out of the fast tier"),
     ("tier_errors", "umap_pager_tier_errors_total",
      "Tier-migration cycles that died on store I/O"),
+    ("tier_cycles", "umap_pager_tier_cycles_total",
+     "Tier-migration engine passes completed"),
 )
 
 # Shard-counter keys broken out per shard (the acceptance signals:

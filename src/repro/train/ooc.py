@@ -82,6 +82,9 @@ class OOCTrainerConfig:
     advise_moments: bool = True       # advise(SEQUENTIAL) on the moments region
     adaptive: bool = False            # let the online classifier drive instead
     moments_fast_tier_bytes: int = 0  # >0: TieredStore-backed moments
+    moments_tier_chain: str = ""      # N-tier cache spec (UMAP_TIER_CHAIN
+    #   syntax, e.g. "host:8m,file:/tmp/mid:32m"); overrides
+    #   moments_fast_tier_bytes when set — the packed image is the base tier
     hot_window_leaves: int = 0        # leading leaves tier-hinted "hot"
     pool_pages: int = 0               # device pool for the param source (0 = all)
     max_step_retries: int = 3         # sweep retries after an I/O fault
@@ -206,7 +209,19 @@ class OOCTrainer:
             pool_pages=ocfg.pool_pages or None)
 
         if mv_factory is None:
-            if ocfg.moments_fast_tier_bytes > 0:
+            if ocfg.moments_tier_chain:
+                spec = ocfg.moments_tier_chain
+
+                def mv_factory(buf, _spec=spec):
+                    from ..core.store import (TierChain, build_tier_stores,
+                                              parse_tier_chain)
+                    caches = build_tier_stores(_spec)
+                    sizes = [args[-1] for _, args in parse_tier_chain(_spec)]
+                    return TierChain(
+                        caches + [HostArrayStore(buf)],
+                        extent_size=min(1 << 20, *sizes),
+                        budgets=sizes)
+            elif ocfg.moments_fast_tier_bytes > 0:
                 fast = ocfg.moments_fast_tier_bytes
 
                 def mv_factory(buf, _fast=fast):

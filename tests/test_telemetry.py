@@ -246,7 +246,7 @@ PAGER_COUNTERS = {
     "umap_pager_quarantine_retries_total",
     "umap_pager_pattern_transitions_total",
     "umap_pager_tier_promotions_total", "umap_pager_tier_demotions_total",
-    "umap_pager_tier_errors_total",
+    "umap_pager_tier_errors_total", "umap_pager_tier_cycles_total",
     "umap_pager_shard_demand_faults_total",
     "umap_pager_shard_lock_contended_total",
     "umap_pager_shard_fill_stalls_total",
@@ -328,13 +328,22 @@ class TestPagerCollector:
 
 TIER_COUNTERS = {
     "umap_tier_promotions_total", "umap_tier_demotions_total",
-    "umap_tier_migration_aborts_total", "umap_tier_fast_read_bytes_total",
-    "umap_tier_slow_read_bytes_total",
+    "umap_tier_migration_aborts_total", "umap_tier_read_bytes_total",
+    "umap_tier_migration_write_bytes_total",
+    "umap_tier_shadow_demotions_total", "umap_tier_failovers_total",
 }
 TIER_GAUGES = {
-    "umap_tier_resident_extents", "umap_tier_free_fast_slots",
+    "umap_tier_resident_extents", "umap_tier_free_slots",
+    "umap_tier_slots", "umap_tier_utility", "umap_tier_latency_seconds",
     "umap_tier_dirty_extents", "umap_tier_pinned_fast_extents",
-    "umap_tier_fast_slots", "umap_tier_extent_size_bytes",
+    "umap_tier_levels", "umap_tier_extent_size_bytes",
+}
+# families carrying one sample per chain level, labeled tier="0"..tier="N"
+TIER_PER_LEVEL = {
+    "umap_tier_resident_extents", "umap_tier_free_slots", "umap_tier_slots",
+    "umap_tier_utility", "umap_tier_latency_seconds",
+    "umap_tier_read_bytes_total", "umap_tier_promotions_total",
+    "umap_tier_demotions_total", "umap_tier_migration_write_bytes_total",
 }
 
 
@@ -352,7 +361,26 @@ class TestTieringCollector:
         for name in TIER_GAUGES:
             assert fams[name].kind == "gauge", name
         for fam in fams.values():
-            assert all(lab == {"source": "t"} for _, lab, _ in fam.samples)
+            for _, lab, _ in fam.samples:
+                assert lab["source"] == "t", fam.name
+                if fam.name in TIER_PER_LEVEL:
+                    assert lab["tier"] in {"0", "1"}, fam.name
+                else:
+                    assert "tier" not in lab, fam.name
+
+    def test_per_level_tier_labels(self):
+        """One family per metric, one sample per chain level — a two-tier
+        store emits tier=0 (fast) and tier=1 (base) under the SAME family
+        names a deeper chain uses."""
+        fams = families_of(TieringCollector(self._store(), label="t"))
+        for name in TIER_PER_LEVEL - {"umap_tier_latency_seconds"}:
+            tiers = [lab["tier"] for _, lab, _ in fams[name].samples]
+            assert tiers == ["0", "1"], name
+        lat = {(lab["tier"], lab["op"]) for _, lab, _ in
+               fams["umap_tier_latency_seconds"].samples}
+        assert lat == {("0", "read"), ("0", "write"),
+                       ("1", "read"), ("1", "write")}
+        assert fams["umap_tier_levels"].samples[0][2] == 2
 
     def test_tracks_promotions_and_residency(self):
         store = self._store()
@@ -362,9 +390,23 @@ class TestTieringCollector:
         buf = np.empty(PS, np.uint8)
         store.read_into(0, buf)                     # promote_on_read extent 0
         after = families_of(col)
-        assert after["umap_tier_promotions_total"].samples[0][2] >= 1
-        assert after["umap_tier_resident_extents"].samples[0][2] >= 1
-        assert after["umap_tier_slow_read_bytes_total"].samples[0][2] >= PS
+
+        def tier0(fam):
+            return [v for _, lab, v in fam.samples if lab["tier"] == "0"][0]
+
+        def base(fam):
+            return [v for _, lab, v in fam.samples if lab["tier"] == "1"][0]
+
+        assert tier0(after["umap_tier_promotions_total"]) >= 1
+        assert tier0(after["umap_tier_resident_extents"]) >= 1
+        assert base(after["umap_tier_read_bytes_total"]) >= PS
+        # staging the promote copy wrote one extent into the fast tier
+        assert tier0(after["umap_tier_migration_write_bytes_total"]) \
+            >= store.extent_size
+        # the staging read sampled the base tier's latency EWMA
+        lat = {(lab["tier"], lab["op"]): v for _, lab, v in
+               after["umap_tier_latency_seconds"].samples}
+        assert lat[("1", "read")] > 0.0
 
     def test_relaxed_tier_stats_matches_locked_when_quiescent(self):
         store = self._store()
@@ -377,7 +419,7 @@ class TestTieringCollector:
         store = self._store()
         name = store.register_telemetry(registry=reg, label="direct")
         assert name == "tiering:direct"
-        assert "umap_tier_fast_slots" in parse_exposition(reg.render())
+        assert "umap_tier_slots" in parse_exposition(reg.render())
 
 
 # ----------------------------------------------------------- LeaseCollector

@@ -1,0 +1,418 @@
+"""N-tier chain semantics (DESIGN.md §14): spec parsing, per-level
+residency with non-exclusive shadow copies, write-invalidation, online
+latency sampling, per-level circuit-breaker route-around, target-level
+hints through the region API, the deprecated two-knob env shim, and the
+in-flight-write migration race the shared commit predicate must catch.
+"""
+
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import UMapConfig, umap, uunmap
+from repro.core.store import (
+    HostArrayStore,
+    RemoteStore,
+    TierChain,
+    TieredStore,
+    build_tier_stores,
+    parse_tier_chain,
+)
+
+PS = 4096
+EXT = 4 * PS
+
+
+def _chain(npages=32, fast_exts=2, mid_exts=4, **kw):
+    """host fast + host mid caches over a patterned host base tier."""
+    data = (np.arange(npages * PS) % 251).astype(np.uint8)
+    kw.setdefault("promote_on_read", False)
+    tc = TierChain(
+        [HostArrayStore(np.zeros(fast_exts * EXT, np.uint8)),
+         HostArrayStore(np.zeros(mid_exts * EXT, np.uint8)),
+         HostArrayStore(data)],
+        extent_size=EXT,
+        budgets=[fast_exts * EXT, mid_exts * EXT], **kw)
+    return tc, data
+
+
+def _read(tc, ext):
+    buf = np.empty(EXT, np.uint8)
+    tc.read_into(ext * EXT, buf)
+    return buf
+
+
+def _wait(predicate, timeout=10.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(0.01)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+# ------------------------------------------------------------- spec parsing
+
+
+class TestChainSpec:
+    def test_host_and_file_levels_with_suffixes(self, tmp_path):
+        spec = f"host:8M, file:{tmp_path}/mid.bin:64K ,host:1g"
+        levels = parse_tier_chain(spec)
+        assert levels == [("host", (8 << 20,)),
+                          ("file", (f"{tmp_path}/mid.bin", 64 << 10)),
+                          ("host", (1 << 30,))]
+
+    def test_spec_carries_no_latency_figures(self):
+        # The grammar has nowhere to declare a tier speed: any extra
+        # colon-separated field is rejected.  Latency is sampled online.
+        with pytest.raises(ValueError):
+            parse_tier_chain("host:8M:5ms")
+
+    @pytest.mark.parametrize("bad", ["", " , ", "host", "gpu:8M",
+                                     "file:/tmp/x", "host:0"])
+    def test_bad_specs_raise(self, bad):
+        with pytest.raises(ValueError):
+            parse_tier_chain(bad)
+
+    def test_build_tier_stores(self, tmp_path):
+        spec = f"host:{EXT},file:{tmp_path}/t.bin:{2 * EXT}"
+        stores = build_tier_stores(spec)
+        assert [s.size for s in stores] == [EXT, 2 * EXT]
+        stores[1].write_from(0, np.full(PS, 7, np.uint8))
+        got = np.empty(PS, np.uint8)
+        stores[1].read_into(0, got)
+        assert np.array_equal(got, np.full(PS, 7, np.uint8))
+
+    def test_from_config_builds_chain(self):
+        cfg = UMapConfig(tier_chain=f"host:{2 * EXT},host:{4 * EXT}",
+                         tier_extent_size=EXT)
+        tc = TierChain.from_config(
+            HostArrayStore(np.zeros(32 * PS, np.uint8)), cfg)
+        assert tc.base_level == 2 and len(tc.levels) == 3
+        assert tc.extent_size == EXT
+        assert tc.free_slots(0) == 2 and tc.free_slots(1) == 4
+
+
+# ------------------------------------------------ residency + shadow copies
+
+
+class TestShadowResidency:
+    def test_promote_up_chain_reads_from_fastest(self):
+        tc, data = _chain()
+        assert tc.promote(3, level=1) and tc.promote(3, level=0)
+        # non-exclusive: BOTH cache levels hold a valid copy
+        assert 3 in tc.resident_extents(0) and 3 in tc.resident_extents(1)
+        assert tc.extent_level(3) == 0
+        before = tc.tier_stats()["read_bytes_by_level"]
+        assert np.array_equal(_read(tc, 3), data[3 * EXT:4 * EXT])
+        after = tc.tier_stats()["read_bytes_by_level"]
+        assert after[0] - before[0] == EXT          # served by the fast copy
+        assert after[1] == before[1] and after[2] == before[2]
+
+    def test_clean_demote_is_residency_flip(self):
+        tc, data = _chain()
+        tc.promote(2, level=1)
+        tc.promote(2, level=0)
+        wrote = tc.tier_stats()["migration_write_bytes_by_level"]
+        assert tc.demote(2, level=0)
+        stats = tc.tier_stats()
+        assert stats["shadow_demotions"] == 1
+        # the flip moved NO bytes anywhere
+        assert stats["migration_write_bytes_by_level"] == wrote
+        assert 2 not in tc.resident_extents(0) and 2 in tc.resident_extents(1)
+        assert np.array_equal(_read(tc, 2), data[2 * EXT:3 * EXT])
+
+    def test_copy_on_demote_baseline_always_writes_back(self):
+        tc, _ = _chain(copy_on_demote=True)
+        tc.promote(2, level=1)
+        tc.promote(2, level=0)
+        base_wrote = tc.tier_stats()["migration_write_bytes_by_level"][2]
+        assert tc.demote(2, level=0)
+        stats = tc.tier_stats()
+        assert stats["shadow_demotions"] == 0
+        assert stats["migration_write_bytes_by_level"][2] == base_wrote + EXT
+
+    def test_write_invalidates_other_copies(self):
+        tc, data = _chain()
+        tc.promote(1, level=1)
+        tc.promote(1, level=0)
+        new = np.full(EXT, 9, np.uint8)
+        tc.write_from(1 * EXT, new)
+        # the write landed in the fastest copy and killed the others
+        assert 1 in tc.resident_extents(0)
+        assert 1 not in tc.resident_extents(1)
+        assert np.array_equal(_read(tc, 1), new)
+        # demoting the now-sole dirty copy must write back, not flip
+        assert tc.demote(1, level=0)
+        assert tc.tier_stats()["shadow_demotions"] == 0
+        assert np.array_equal(_read(tc, 1), new)     # served by base now
+        got = np.empty(EXT, np.uint8)
+        tc.levels[-1].read_into(1 * EXT, got)
+        assert np.array_equal(got, new)
+
+    def test_budget_never_exceeded(self):
+        tc, data = _chain(fast_exts=2, mid_exts=3)
+        for ext in range(6):
+            tc.promote(ext, level=1)
+            tc.promote(ext, level=0)
+        stats = tc.tier_stats()
+        assert stats["resident_by_level"][0] <= 2
+        assert stats["resident_by_level"][1] <= 3
+        for ext in range(8):
+            assert np.array_equal(_read(tc, ext),
+                                  data[ext * EXT:(ext + 1) * EXT])
+
+
+# ------------------------------------------------------- latency calibration
+
+
+class TestLatencySampling:
+    def test_unsampled_levels_read_zero(self):
+        tc, _ = _chain()
+        for lvl in range(3):
+            assert tc.sampled_latency(lvl, "read") == 0.0
+            assert tc.sampled_latency(lvl, "write") == 0.0
+
+    def test_sampler_orders_tiers_by_observed_latency(self):
+        data = (np.arange(16 * PS) % 251).astype(np.uint8)
+        tc = TierChain(
+            [HostArrayStore(np.zeros(2 * EXT, np.uint8)),
+             RemoteStore(HostArrayStore(np.zeros(4 * EXT, np.uint8)),
+                         latency_s=2e-3),
+             RemoteStore(HostArrayStore(data), latency_s=8e-3)],
+            extent_size=EXT, budgets=[2 * EXT, 4 * EXT],
+            promote_on_read=False)
+        tc.promote(0, level=1)
+        tc.promote(0, level=0)
+        for _ in range(3):
+            _read(tc, 0)                 # fast reads
+            _read(tc, 1)                 # base reads
+        r0 = tc.sampled_latency(0, "read")
+        r1 = tc.sampled_latency(1, "read")
+        r2 = tc.sampled_latency(2, "read")
+        assert 0.0 < r0 < r1 < r2
+        assert r1 >= 2e-3 and r2 >= 8e-3
+        stats = tc.tier_stats()
+        assert stats["latency_read_s"] == [r0, r1, r2]
+
+    def test_ewma_converges_not_jumps(self):
+        tc, _ = _chain(ewma_alpha=0.5)
+        tc._note_latency(0, 0, 1.0)
+        tc._note_latency(0, 0, 0.0)
+        assert tc.sampled_latency(0, "read") == pytest.approx(0.5)
+
+
+# -------------------------------------------------- per-level breaker routing
+
+
+class _StubBreaker:
+    def __init__(self):
+        self.down = False
+
+    def tripped(self):
+        return self.down
+
+
+class _BreakeredStore(HostArrayStore):
+    """HostArrayStore carrying a breaker the chain's router duck-types."""
+
+    def __init__(self, arr):
+        super().__init__(arr)
+        self.breaker = _StubBreaker()
+
+
+class TestMidTierBreaker:
+    def test_tripped_middle_tier_routes_around(self):
+        data = (np.arange(64 * PS) % 251).astype(np.uint8)
+        mid = _BreakeredStore(np.zeros(4 * EXT, np.uint8))
+        tc = TierChain(
+            [HostArrayStore(np.zeros(2 * EXT, np.uint8)), mid,
+             HostArrayStore(data)],
+            extent_size=EXT, budgets=[2 * EXT, 4 * EXT],
+            promote_on_read=False)
+        tc.promote(0, level=1)               # copy lives ONLY at mid
+        mid.breaker.down = True
+        mid_reads = mid.stats["read_ops"] if hasattr(mid, "stats") else None
+        before = tc.tier_stats()["read_bytes_by_level"]
+        assert np.array_equal(_read(tc, 0), data[:EXT])
+        after = tc.tier_stats()["read_bytes_by_level"]
+        assert after[1] == before[1]          # tripped tier untouched
+        assert after[2] - before[2] == EXT    # routed around to base
+        assert tc.tier_stats()["tier_failovers"] >= 1
+        # new promotions refuse the downed level outright
+        assert not tc.promote(5, level=1)
+        # recovery: breaker closes, the tier serves again
+        mid.breaker.down = False
+        tc.promote(5, level=1)
+        assert 5 in tc.resident_extents(1)
+
+    def test_sole_copy_on_tripped_tier_still_served(self):
+        # A dirty extent whose ONLY copy sits on the tripped level must
+        # keep routing to it — silently serving stale base bytes is worse
+        # than a slow/failing read.
+        mid = _BreakeredStore(np.zeros(4 * EXT, np.uint8))
+        data = (np.arange(16 * PS) % 251).astype(np.uint8)
+        tc = TierChain(
+            [HostArrayStore(np.zeros(2 * EXT, np.uint8)), mid,
+             HostArrayStore(data)],
+            extent_size=EXT, budgets=[2 * EXT, 4 * EXT],
+            promote_on_read=False)
+        tc.promote(0, level=1)
+        new = np.full(EXT, 3, np.uint8)
+        tc.write_from(0, new)                 # dirty at mid, base stale
+        mid.breaker.down = True
+        assert np.array_equal(_read(tc, 0), new)
+
+
+# -------------------------------------------------- migration race (shared
+# commit predicate regression: in-flight write vs. staged promote)
+
+
+class TestMigrationRace:
+    def test_promote_aborts_on_inflight_write(self):
+        tc, data = _chain()
+        started = threading.Event()
+        finish = threading.Event()
+        orig = tc.levels[-1].read_into
+
+        def slow_read(offset, buf):
+            n = orig(offset, buf)
+            started.set()
+            assert finish.wait(5.0)
+            return n
+
+        tc.levels[-1].read_into = slow_read
+        t = threading.Thread(target=tc.promote, args=(0,), daemon=True)
+        t.start()
+        assert started.wait(5.0)
+        new = np.full(EXT, 5, np.uint8)
+        w = threading.Thread(target=tc.write_from, args=(0, new), daemon=True)
+        w.start()
+        time.sleep(0.05)                      # writer bumps gen before I/O
+        finish.set()
+        t.join(5.0)
+        w.join(5.0)
+        tc.levels[-1].read_into = orig
+        assert tc.tier_stats()["migration_aborts"] >= 1
+        assert 0 not in tc.resident_extents(0)      # stale copy not published
+        assert tc.free_slots(0) == 2                # staged slot returned
+        assert np.array_equal(_read(tc, 0), new)
+        assert tc.promote(0) is True                # engine survives
+
+
+# -------------------------------------------------------- target-level hints
+
+
+def _chain_region(npages=64, fast_exts=2, mid_exts=4, **cfg_kw):
+    data = (np.arange(npages * PS) % 251).astype(np.uint8)
+    tc = TierChain(
+        [HostArrayStore(np.zeros(fast_exts * EXT, np.uint8)),
+         HostArrayStore(np.zeros(mid_exts * EXT, np.uint8)),
+         HostArrayStore(data)],
+        extent_size=EXT, budgets=[fast_exts * EXT, mid_exts * EXT],
+        promote_on_read=False)
+    cfg_kw.setdefault("tier_interval_s", 0.05)
+    cfg_kw.setdefault("tier_promote_heat", 2.0)
+    cfg = UMapConfig(page_size=PS, buffer_size=16 * PS, num_fillers=2,
+                     num_evictors=1, shards=2, **cfg_kw)
+    return umap(tc, config=cfg), tc, data
+
+
+class TestTargetLevelHints:
+    def test_hot_level_hint_lands_mid_chain(self):
+        r, tc, data = _chain_region()
+        try:
+            r.advise(tier_hint="hot:1", offset=3 * EXT, nbytes=2 * EXT)
+            _wait(lambda: {3, 4} <= set(tc.resident_extents(1)),
+                  msg="hot:1 extents at level 1")
+            assert 3 not in tc.resident_extents(0)
+            assert 4 not in tc.resident_extents(0)
+            got = r.read(3 * EXT, EXT)
+            assert np.array_equal(got, data[3 * EXT:4 * EXT])
+        finally:
+            uunmap(r)
+
+    def test_pin_fast_level_hint_pins_and_holds(self):
+        r, tc, data = _chain_region()
+        try:
+            r.advise(tier_hint="pin_fast:1", offset=0, nbytes=EXT)
+            _wait(lambda: 0 in tc.resident_extents(1),
+                  msg="pinned extent at level 1")
+            assert tc.pin_levels() == {0: 1}
+            # a demote that would strand the pin below its ceiling refuses
+            assert not tc.demote(0, level=1)
+        finally:
+            uunmap(r)
+
+    def test_bad_level_hint_raises(self):
+        r, tc, _ = _chain_region()
+        try:
+            with pytest.raises(ValueError):
+                r.advise(tier_hint="hot:9", offset=0, nbytes=EXT)
+            with pytest.raises(ValueError):
+                r.advise(tier_hint="cold:1", offset=0, nbytes=EXT)
+            with pytest.raises(ValueError):
+                r.advise(tier_hint="hot:x", offset=0, nbytes=EXT)
+        finally:
+            uunmap(r)
+
+
+# --------------------------------------------------------------- env shim
+
+
+class TestDeprecatedEnvShim:
+    def test_fast_bytes_env_maps_to_depth2_chain(self):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            cfg = UMapConfig.from_env(env={
+                "UMAP_TIER_FAST_BYTES": str(4 * EXT)})
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        assert cfg.tier_chain == f"host:{4 * EXT}"
+        assert cfg.tier_fast_bytes == 4 * EXT
+
+    def test_explicit_chain_spec_wins_over_legacy_knob(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")   # no deprecation when both set
+            cfg = UMapConfig.from_env(env={
+                "UMAP_TIER_CHAIN": f"host:{2 * EXT}",
+                "UMAP_TIER_FAST_BYTES": str(4 * EXT)})
+        assert cfg.tier_chain == f"host:{2 * EXT}"
+
+    def test_legacy_env_behaves_byte_identically(self):
+        """The shimmed depth-2 chain serves the same bytes with the same
+        migration behavior as the legacy two-knob TieredStore."""
+        npages = 32
+        data = (np.arange(npages * PS) % 251).astype(np.uint8)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            cfg = UMapConfig.from_env(env={
+                "UMAP_TIER_FAST_BYTES": str(2 * EXT),
+                "UMAP_TIER_EXTENT": str(EXT)})
+        legacy = TieredStore.from_config(HostArrayStore(data.copy()),
+                                         UMapConfig(tier_fast_bytes=2 * EXT,
+                                                    tier_extent_size=EXT))
+        shimmed = TierChain.from_config(HostArrayStore(data.copy()), cfg)
+        assert shimmed.extent_size == legacy.extent_size == EXT
+        assert shimmed.num_fast_slots == legacy.num_fast_slots == 2
+        assert shimmed.base_level == legacy.base_level == 1
+        for ts in (legacy, shimmed):
+            assert ts.promote(1) and ts.promote(3)
+            new = np.full(EXT, 11, np.uint8)
+            ts.write_from(3 * EXT, new)
+            assert ts.demote(1)
+        for ext in range(8):
+            want = (np.full(EXT, 11, np.uint8) if ext == 3
+                    else data[ext * EXT:(ext + 1) * EXT])
+            a = np.empty(EXT, np.uint8)
+            b = np.empty(EXT, np.uint8)
+            legacy.read_into(ext * EXT, a)
+            shimmed.read_into(ext * EXT, b)
+            assert np.array_equal(a, want) and np.array_equal(b, want), ext
+        ls, ss = legacy.tier_stats(), shimmed.tier_stats()
+        for key in ("resident_extents", "free_fast_slots", "dirty_extents",
+                    "promotions", "demotions", "resident_by_level",
+                    "slots_by_level", "free_by_level"):
+            assert ls[key] == ss[key], key

@@ -1,0 +1,159 @@
+"""Property suite for the N-tier chain (DESIGN.md §14).
+
+Three invariants under randomized inputs:
+
+* the utility score is monotone in the sampled latency delta (and in
+  heat, anti-monotone in write intensity) — the calibration-driven
+  ranking can never invert when a tier gets slower;
+* the shadow-copy invariant: every level whose residency bit claims an
+  extent holds byte-identical data to the chain's logical contents, at
+  every point of a random promote/demote/write/read interleaving;
+* no level ever exceeds its byte budget, and reads stay byte-exact.
+
+Requires ``hypothesis`` (skipped when the container lacks it, same
+convention as the other property suites).
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.pager import PagingService  # noqa: E402
+from repro.core.store import HostArrayStore, TierChain  # noqa: E402
+
+PS = 1024
+EXT = 2 * PS
+NEXT = 8                        # base-tier extents
+FAST_SLOTS, MID_SLOTS = 2, 3
+
+lat = st.floats(min_value=0.0, max_value=1.0,
+                allow_nan=False, allow_infinity=False)
+pos = st.floats(min_value=0.0, max_value=100.0,
+                allow_nan=False, allow_infinity=False)
+
+
+class TestUtilityFormula:
+    @given(heat=pos, wheat=pos, lat_to=lat, wlat=lat,
+           d1=lat, d2=lat)
+    def test_monotone_in_latency_delta(self, heat, wheat, lat_to, wlat,
+                                       d1, d2):
+        lo, hi = sorted((d1, d2))
+        u = PagingService.tier_utility
+        assert (u(heat, wheat, lat_to + hi, lat_to, wlat)
+                >= u(heat, wheat, lat_to + lo, lat_to, wlat))
+
+    @given(h1=pos, h2=pos, wheat=pos, lat_from=lat, lat_to=lat, wlat=lat)
+    def test_monotone_in_heat(self, h1, h2, wheat, lat_from, lat_to, wlat):
+        lo, hi = sorted((h1, h2))
+        u = PagingService.tier_utility
+        assert (u(hi, wheat, lat_from, lat_to, wlat)
+                >= u(lo, wheat, lat_from, lat_to, wlat))
+
+    @given(heat=pos, w1=pos, w2=pos, lat_from=lat, lat_to=lat, wlat=lat)
+    def test_anti_monotone_in_write_intensity(self, heat, w1, w2,
+                                              lat_from, lat_to, wlat):
+        lo, hi = sorted((w1, w2))
+        u = PagingService.tier_utility
+        assert (u(heat, hi, lat_from, lat_to, wlat)
+                <= u(heat, lo, lat_from, lat_to, wlat))
+
+    @given(heat=pos, wheat=pos, lat_from=lat, lat_to=lat, wlat=lat)
+    def test_slower_placement_never_scores_access_benefit(
+            self, heat, wheat, lat_from, lat_to, wlat):
+        # to a tier no faster than the source, utility <= 0 net of writes
+        u = PagingService.tier_utility
+        if lat_to >= lat_from:
+            assert u(heat, wheat, lat_from, lat_to, wlat) <= 0.0
+
+
+def _fresh_chain():
+    data = (np.arange(NEXT * EXT) % 251).astype(np.uint8)
+    tc = TierChain(
+        [HostArrayStore(np.zeros(FAST_SLOTS * EXT, np.uint8)),
+         HostArrayStore(np.zeros(MID_SLOTS * EXT, np.uint8)),
+         HostArrayStore(data.copy())],
+        extent_size=EXT,
+        budgets=[FAST_SLOTS * EXT, MID_SLOTS * EXT],
+        promote_on_read=False)
+    return tc, data.copy()
+
+
+def _check_invariants(tc, model):
+    stats = tc.tier_stats()
+    # budgets: slot occupancy can never exceed the level's slot count
+    assert stats["resident_by_level"][0] <= FAST_SLOTS
+    assert stats["resident_by_level"][1] <= MID_SLOTS
+    # shadow-copy invariant: every claimed residency is byte-identical
+    # to the model (the VALID-copies-only invariant made executable)
+    with tc._lock:
+        claims = [(ext, lvl, tc._slots[lvl][ext])
+                  for ext in range(NEXT)
+                  for lvl in range(tc.base_level)
+                  if tc._valid.get(ext, tc._base_bit) & (1 << lvl)]
+    for ext, lvl, slot in claims:
+        got = np.empty(EXT, np.uint8)
+        tc.levels[lvl].read_into(slot * EXT, got)
+        assert np.array_equal(got, model[ext * EXT:(ext + 1) * EXT]), \
+            f"level {lvl} claims a stale copy of extent {ext}"
+
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["promote", "demote", "write", "read"]),
+              st.integers(min_value=0, max_value=NEXT - 1),
+              st.integers(min_value=0, max_value=1),
+              st.integers(min_value=0, max_value=255)),
+    min_size=1, max_size=40)
+
+
+class TestChainInvariants:
+    @settings(max_examples=40, deadline=None)
+    @given(ops=ops)
+    def test_random_interleavings_hold_invariants(self, ops):
+        tc, model = _fresh_chain()
+        for kind, ext, lvl, val in ops:
+            if kind == "promote":
+                tc.promote(ext, level=lvl)
+            elif kind == "demote":
+                tc.demote(ext, level=lvl if lvl < tc.base_level else None)
+            elif kind == "write":
+                buf = np.full(EXT, val, np.uint8)
+                tc.write_from(ext * EXT, buf)
+                model[ext * EXT:(ext + 1) * EXT] = buf
+            else:
+                got = np.empty(EXT, np.uint8)
+                tc.read_into(ext * EXT, got)
+                assert np.array_equal(
+                    got, model[ext * EXT:(ext + 1) * EXT]), \
+                    f"read of extent {ext} returned wrong bytes"
+            _check_invariants(tc, model)
+        # and the chain still flushes down to a consistent base image
+        tc.flush()
+        base = np.empty(NEXT * EXT, np.uint8)
+        tc.levels[-1].read_into(0, base)
+        assert np.array_equal(base, model)
+
+    @settings(max_examples=20, deadline=None)
+    @given(ops=ops, seed=st.integers(min_value=0, max_value=2**31))
+    def test_demand_faults_between_migrations(self, ops, seed):
+        """Same invariants with promote-on-read faulting interleaved."""
+        tc, model = _fresh_chain()
+        tc.promote_on_read = True
+        rng = np.random.default_rng(seed)
+        for kind, ext, lvl, val in ops:
+            if kind == "promote":
+                tc.promote(ext, level=lvl)
+            elif kind == "demote":
+                tc.demote(ext)
+            elif kind == "write":
+                buf = np.full(PS, val, np.uint8)
+                off = ext * EXT + (PS if val % 2 else 0)
+                tc.write_from(off, buf)
+                model[off:off + PS] = buf
+            else:
+                pno = int(rng.integers(0, NEXT * 2))
+                got = np.empty(PS, np.uint8)
+                tc.read_into(pno * PS, got)
+                assert np.array_equal(got, model[pno * PS:(pno + 1) * PS])
+            _check_invariants(tc, model)
